@@ -1,0 +1,67 @@
+"""§Roofline: per-(arch x shape x mesh) terms from the dry-run artifacts.
+
+Reads results/dryrun/*.json (produced by `python -m repro.launch.dryrun`)
+and prints the full baseline table + skip rows.  The dry-run itself is NOT
+re-run here (512 fake devices must not leak into the bench process).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import banner, check, save
+from repro.analysis.roofline import fmt_table
+from repro.configs import SHAPES, get_config, list_archs
+
+_RES = Path(__file__).resolve().parents[1] / "results"
+# prefer the latest cost-model revision of the sweep
+DRYRUN = next(
+    (d for d in (_RES / "dryrun_v3", _RES / "dryrun_v2", _RES / "dryrun")
+     if d.exists() and any(d.glob("*__pod.json"))),
+    _RES / "dryrun",
+)
+
+
+def run() -> dict:
+    banner("Roofline — baseline terms for every (arch x shape x mesh) cell")
+    rows, missing = [], []
+    skips = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape not in cfg.shapes:
+                skips.append(dict(arch=arch, shape=shape,
+                                  reason=cfg.skipped_shapes.get(shape, "n/a")))
+                continue
+            for mesh in ("pod", "multipod"):
+                f = DRYRUN / f"{arch}__{shape}__{mesh}.json"
+                if not f.exists():
+                    missing.append(f.name)
+                    continue
+                rec = json.loads(f.read_text())
+                rows.append(rec["roofline"])
+    pod_rows = [r for r in rows if r["mesh"] == "pod"]
+    print(fmt_table(pod_rows))
+    print(f"\n  ({len(rows) - len(pod_rows)} multipod cells also compiled; "
+          f"table shown single-pod per the assignment)")
+    if skips:
+        print("\n  skipped cells (sub-quadratic rule):")
+        for s in skips:
+            print(f"    {s['arch']:24s} {s['shape']:10s} — {s['reason'][:60]}")
+    n_runnable = sum(len(get_config(a).shapes) for a in list_archs())
+    ok1 = check(
+        f"all {n_runnable} runnable single-pod cells present",
+        len(pod_rows) == n_runnable, f"{len(pod_rows)}/{n_runnable}",
+    )
+    ok2 = check("all runnable multipod cells present",
+                len(rows) - len(pod_rows) == n_runnable,
+                f"{len(rows)-len(pod_rows)}/{n_runnable}")
+    ok3 = check("40 total cells accounted for (runnable + skipped)",
+                len(pod_rows) + len(skips) == 40)
+    return dict(rows=rows, skips=skips, missing=missing,
+                checks=dict(pod=ok1, multipod=ok2, total=ok3))
+
+
+if __name__ == "__main__":
+    save("bench_roofline", run())

@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: result I/O + tiny ASCII plotting."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "benchmarks"
+
+
+def save(name: str, payload: Dict) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=float))
+    return p
+
+
+def banner(title: str):
+    print("\n" + "=" * 78)
+    print(f"== {title}")
+    print("=" * 78)
+
+
+def check(desc: str, ok: bool, detail: str = ""):
+    mark = "PASS" if ok else "WARN"
+    print(f"  [{mark}] {desc}" + (f" — {detail}" if detail else ""))
+    return bool(ok)
+
+
+def run_timed(fn: Callable[[], Dict], name: str) -> Dict:
+    t0 = time.time()
+    out = fn()
+    out["_seconds"] = round(time.time() - t0, 2)
+    save(name, out)
+    return out
+
+
+def ascii_curve(xs, ys, width=60, label=""):
+    """One-line-per-point ascii plot for terminal-readable benchmarks."""
+    if not ys:
+        return
+    lo, hi = min(ys), max(ys)
+    rng = (hi - lo) or 1.0
+    for x, y in zip(xs, ys):
+        n = int((y - lo) / rng * width)
+        print(f"  {x:>10} | {'#' * n}{' ' * (width - n)} {y:.4g} {label}")

@@ -1,0 +1,61 @@
+"""Fig. 4: path-length CDFs — 648-host Opera vs u=7 expander vs 3:1 Clos."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, check, save
+from repro.core.expander import (
+    mean_max_path,
+    path_length_cdf,
+    random_regular_expander,
+)
+from repro.core.topology import build_opera_topology
+
+
+def run() -> dict:
+    banner("Fig. 4 — path length CDFs (648-host design point)")
+    topo = build_opera_topology(108, 6, seed=0)
+    # aggregate the CDF across a sample of slices
+    cdfs = []
+    maxes, means = [], []
+    for t in range(0, topo.num_slices, 6):
+        adj = topo.adjacency(t)
+        cdfs.append(path_length_cdf(adj))
+        m, mx, _ = mean_max_path(adj)
+        means.append(m)
+        maxes.append(mx)
+    hmax = max(max(c) for c in cdfs)
+    opera_cdf = {
+        h: float(np.mean([c.get(h, 1.0) for c in cdfs]))
+        for h in range(1, hmax + 1)
+    }
+
+    exp = random_regular_expander(130, 7, seed=1)
+    exp_cdf = path_length_cdf(exp)
+    exp_mean, exp_max, _ = mean_max_path(exp)
+
+    # 3:1 folded Clos (12 pods x 9 racks): 2 ToR-ToR hops in-pod, 4 across
+    same = 9 * 8 / (108 * 107)
+    clos_cdf = {2: 12 * same, 4: 1.0}
+
+    print(f"  opera : mean {np.mean(means):.2f}  max {max(maxes)}  cdf {opera_cdf}")
+    print(f"  u=7 ex: mean {exp_mean:.2f}  max {exp_max}  cdf {exp_cdf}")
+    print(f"  clos  : cdf {clos_cdf}")
+
+    ok1 = check("Opera worst-case path <= 5-6 hops (paper: 5)", max(maxes) <= 6,
+                f"max={max(maxes)}")
+    ok2 = check("Opera only marginally longer than u=7 expander (paper)",
+                np.mean(means) - exp_mean < 1.0,
+                f"{np.mean(means):.2f} vs {exp_mean:.2f}")
+    ok3 = check("Opera beats the Clos 4-hop cross-pod mass",
+                opera_cdf.get(4, 1.0) > clos_cdf[2])
+    return dict(
+        opera_cdf=opera_cdf, opera_mean=float(np.mean(means)),
+        opera_max=int(max(maxes)), expander_cdf=exp_cdf,
+        expander_mean=exp_mean, clos_cdf=clos_cdf,
+        checks=dict(max_path=ok1, near_expander=ok2, beats_clos=ok3),
+    )
+
+
+if __name__ == "__main__":
+    save("fig04_path_lengths", run())

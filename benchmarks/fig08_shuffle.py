@@ -1,0 +1,46 @@
+"""Fig. 8: 100 KB all-to-all shuffle — Opera ~4x the static networks."""
+from __future__ import annotations
+
+from benchmarks.common import banner, check, save
+from repro.configs.opera_paper import OPERA_648
+from repro.core.expander import random_regular_expander
+from repro.netsim.fluid import (
+    simulate_clos_bulk,
+    simulate_expander_bulk,
+    simulate_rotor_bulk,
+)
+from repro.netsim.workloads import demand_all_to_all
+
+
+def run() -> dict:
+    banner("Fig. 8 — 100 KB shuffle (all-to-all), 648 hosts")
+    d = demand_all_to_all(108, 6, 100e3)
+    opera = simulate_rotor_bulk(OPERA_648, d, vlb=False, max_cycles=40)
+    clos = simulate_clos_bulk(648, d, 10.0, 3.0)
+    adj = random_regular_expander(130, 7, seed=1)
+    exp = simulate_expander_bulk(
+        adj, demand_all_to_all(130, 5, 100e3), 10.0, dt_us=2000.0
+    )
+    print(f"  opera    99p FCT {opera.fct_99_ms:7.1f} ms  tax {opera.bandwidth_tax:5.2f}  tput {opera.throughput_gbps:7.0f} Gb/s   (paper:  60 ms)")
+    print(f"  clos 3:1 99p FCT {clos.fct_99_ms:7.1f} ms  tax {clos.bandwidth_tax:5.2f}  tput {clos.throughput_gbps:7.0f} Gb/s   (paper: 227 ms)")
+    print(f"  exp u=7  99p FCT {exp.fct_99_ms:7.1f} ms  tax {exp.bandwidth_tax:5.2f}  tput {exp.throughput_gbps:7.0f} Gb/s   (paper: 223 ms)")
+
+    ratio = min(clos.fct_99_ms, exp.fct_99_ms) / opera.fct_99_ms
+    ok1 = check("Opera 99p FCT 50-85 ms (paper 60)", 50 <= opera.fct_99_ms <= 85)
+    ok2 = check("Opera pays zero bandwidth tax on shuffle",
+                opera.bandwidth_tax < 0.01)
+    ok3 = check("Opera >= ~2-4x faster than best static (paper ~3.7x)",
+                ratio >= 1.8, f"ratio={ratio:.2f}")
+    ok4 = check("expander pays a multi-hop tax >= 100%",
+                exp.bandwidth_tax >= 1.0, f"tax={exp.bandwidth_tax:.2f}")
+    return dict(
+        opera_fct99_ms=opera.fct_99_ms, clos_fct99_ms=clos.fct_99_ms,
+        expander_fct99_ms=exp.fct_99_ms, opera_tax=opera.bandwidth_tax,
+        expander_tax=exp.bandwidth_tax, speedup_vs_best_static=ratio,
+        paper=dict(opera=60, clos=227, expander=223),
+        checks=dict(fct=ok1, taxfree=ok2, speedup=ok3, exp_tax=ok4),
+    )
+
+
+if __name__ == "__main__":
+    save("fig08_shuffle", run())

@@ -1,0 +1,64 @@
+"""Fig. 11 + App. E: fault tolerance of the 648-host Opera network."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, check, save
+from repro.core.routing import FailureSet, connectivity_loss, path_stretch
+from repro.core.topology import build_opera_topology
+
+
+def run() -> dict:
+    banner("Fig. 11 — connectivity under link/ToR/switch failures (108 racks)")
+    # design-time realization selected for 2-switch fault tolerance
+    # (the paper's generate-and-test, §3.3 / Fig. 11c)
+    topo = build_opera_topology(108, 6, seed=1, switch_fault_tolerance=2)
+    rng = np.random.default_rng(0)
+    slices = range(0, topo.num_slices, 4)
+    n_links = 108 * 6 // 2  # rack-uplink pairs ~ one per live circuit
+
+    out = {"links": [], "tors": [], "switches": []}
+    for frac in (0.02, 0.04, 0.08):
+        k = int(frac * n_links)
+        fails = set()
+        while len(fails) < k:
+            a, b = rng.integers(0, 108, 2)
+            if a != b:
+                fails.add((min(a, b), max(a, b)))
+        loss = connectivity_loss(topo, FailureSet(links=fails), slices)
+        st = path_stretch(topo, FailureSet(links=fails), list(slices)[:6])
+        out["links"].append(dict(frac=frac, **loss, **st))
+        print(f"  links {frac:4.2f}: worst-slice disc "
+              f"{loss['worst_slice_disconnected_frac']:.4f}  mean path "
+              f"{st['mean_path']:.2f}")
+
+    for frac in (0.05, 0.07, 0.12):
+        k = max(1, int(frac * 108))
+        tors = set(rng.choice(108, k, replace=False).tolist())
+        loss = connectivity_loss(topo, FailureSet(tors=tors), slices)
+        out["tors"].append(dict(frac=frac, **loss))
+        print(f"  tors  {frac:4.2f}: worst-slice disc "
+              f"{loss['worst_slice_disconnected_frac']:.4f}")
+
+    for k in (1, 2, 3):
+        loss = connectivity_loss(
+            topo, FailureSet(switches=set(range(k))), slices
+        )
+        out["switches"].append(dict(count=k, frac=k / 6, **loss))
+        print(f"  switches {k}/6: worst-slice disc "
+              f"{loss['worst_slice_disconnected_frac']:.4f}")
+
+    ok1 = check("~4% link failures tolerated (paper)",
+                out["links"][1]["worst_slice_disconnected_frac"] < 0.01)
+    ok2 = check("~7% ToR failures tolerated (paper)",
+                out["tors"][1]["worst_slice_disconnected_frac"] < 0.01)
+    ok3 = check("2/6 circuit switches tolerated (paper: 33%)",
+                out["switches"][1]["worst_slice_disconnected_frac"] < 0.01)
+    ok4 = check("failures stretch paths (App. E)",
+                out["links"][-1]["mean_path"] > 3.0)
+    out["checks"] = dict(links=ok1, tors=ok2, switches=ok3, stretch=ok4)
+    return out
+
+
+if __name__ == "__main__":
+    save("fig11_faults", run())

@@ -1,0 +1,47 @@
+"""Fig. 12 / App. A+C: cost-normalized throughput vs alpha (k=24 and k=12)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, check, save
+from repro.netsim.capacity import crossover_alpha, fig12_model
+
+
+def run() -> dict:
+    banner("Fig. 12 — throughput vs Opera-port cost ratio alpha")
+    out = {}
+    for k in (24, 12):
+        out[f"k{k}"] = {}
+        for wl in ("hotrack", "skew", "permutation", "shuffle"):
+            rows = [fig12_model(a, wl, k) for a in (1.0, 1.3, 1.8, 2.0)]
+            out[f"k{k}"][wl] = rows
+            r13, r20 = rows[1], rows[3]
+            print(f"  k={k} {wl:11s} alpha=1.3: opera {r13['opera']:.2f} "
+                  f"exp {r13['expander']:.2f} clos {r13['clos']:.2f} | "
+                  f"alpha=2.0: opera {r20['opera']:.2f} "
+                  f"exp {r20['expander']:.2f}")
+    r = out["k24"]
+    ok1 = check("shuffle: Opera ~2x best static even at alpha=2 (paper)",
+                r["shuffle"][3]["opera"] >=
+                1.5 * max(r["shuffle"][3]["expander"], r["shuffle"][3]["clos"]))
+    ok2 = check("permutation: Opera wins at alpha<=1.3 (paper: alpha<1.8)",
+                r["permutation"][1]["opera"] >=
+                max(r["permutation"][1]["expander"], r["permutation"][1]["clos"]))
+    ok3 = check("hotrack: Opera comparable to expander (paper)",
+                r["hotrack"][1]["opera"] >= 0.55 * r["hotrack"][1]["expander"])
+    xo = crossover_alpha("permutation", 24)
+    ok4 = check("crossover alpha in [1.3, 2.6] (paper ~1.8)", 1.3 <= xo <= 2.6,
+                f"alpha*={xo:.2f}")
+    k_equal = all(
+        abs(out["k24"][wl][1]["opera"] - out["k12"][wl][1]["opera"]) < 0.15
+        for wl in ("shuffle", "permutation")
+    )
+    ok5 = check("k=12 vs k=24 nearly identical (App. C)", k_equal)
+    out["crossover_alpha"] = xo
+    out["checks"] = dict(shuffle2x=ok1, perm=ok2, hotrack=ok3, xover=ok4,
+                         scale_invariant=ok5)
+    return out
+
+
+if __name__ == "__main__":
+    save("fig12_cost", run())

@@ -1,0 +1,42 @@
+"""§4.1 + §3.5 + App. B: cycle-time arithmetic and guard-band sensitivity."""
+from __future__ import annotations
+
+from benchmarks.common import banner, check, save
+from repro.configs.opera_paper import OPERA_648
+from repro.core.schedule import cycle_timing, scaled_cycle_table
+
+
+def run() -> dict:
+    banner("§4.1 — cycle-time model (648-host design point)")
+    t = cycle_timing(OPERA_648)
+    print(f"  epsilon          {t.epsilon_us:8.1f} us   (paper:  90 us)")
+    print(f"  slice            {t.slice_us:8.1f} us   (paper: ~100 us)")
+    print(f"  per-switch period{t.per_switch_period_us:8.1f} us   (paper: ~6 eps)")
+    print(f"  duty cycle       {100*t.duty_cycle:8.2f} %    (paper:  98 %)")
+    print(f"  cycle            {t.cycle_ms:8.2f} ms   (paper: 10.7 ms)")
+    print(f"  bulk cutoff      {t.bulk_cutoff_mb:8.1f} MB   (paper:  15 MB)")
+    print(f"  guard-band cost  {100*t.ll_capacity_loss_per_guard_us:.2f} %/us "
+          f"latency, {100*t.bulk_capacity_loss_per_guard_us:.2f} %/us bulk "
+          f"(paper: 1 %/us, 0.2 %/us)")
+
+    rows = scaled_cycle_table()
+    print("\n  App. B — grouped reconfiguration, cycle scaling:")
+    for r in rows:
+        print(f"    k={r['k']:2d} hosts={r['hosts']:6d} groups={r['groups']} "
+              f"cycle {r['cycle_ms']:8.2f} ms (rel {r['relative_cycle']:.1f}x) "
+              f"cutoff {r['bulk_cutoff_mb']:.0f} MB")
+    ok1 = check("eps within 15% of paper's 90 us", 85 <= t.epsilon_us <= 110)
+    ok2 = check("duty cycle ~98%", 0.97 <= t.duty_cycle <= 0.99)
+    ok3 = check("cycle ~10.7 ms (+-20%)", 9.0 <= t.cycle_ms <= 13.0)
+    ok4 = check("bulk cutoff ~15 MB", 11 <= t.bulk_cutoff_mb <= 18)
+    k64 = [r for r in rows if r["k"] == 64][0]
+    ok5 = check("k=64 cutoff ~90 MB (App. B)", 50 <= k64["bulk_cutoff_mb"] <= 140,
+                f"{k64['bulk_cutoff_mb']:.0f} MB")
+    return dict(
+        timing=t.__dict__, scaling=rows,
+        checks=dict(eps=ok1, duty=ok2, cycle=ok3, cutoff=ok4, k64=ok5),
+    )
+
+
+if __name__ == "__main__":
+    save("sec41_cycle_time", run())

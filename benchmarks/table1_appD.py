@@ -1,0 +1,65 @@
+"""Table 1 (routing state) + Appendix D (spectral gap / path optimality)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, check, save
+from repro.core.expander import (
+    mean_max_path,
+    ramanujan_bound,
+    random_regular_expander,
+    spectral_gap,
+)
+from repro.core.routing import ruleset_size
+from repro.core.topology import build_opera_topology
+
+# Table 1 published values
+PUBLISHED = {108: 12_096, 252: 65_268, 520: 276_120, 768: 600_576,
+             1008: 1_032_192, 1200: 1_461_600}
+
+
+def run() -> dict:
+    banner("Table 1 — routing state scaling")
+    table = []
+    for n, pub in PUBLISHED.items():
+        mine = ruleset_size(n)
+        table.append(dict(racks=n, model=mine, published=pub,
+                          ratio=mine / pub))
+        print(f"  {n:5d} racks: model {mine:10,}  published {pub:10,} "
+              f"(ratio {mine/pub:.2f})")
+    ok1 = check("O(N^2) scaling matches published counts within 15%",
+                all(0.85 <= r["ratio"] <= 1.15 for r in table))
+
+    banner("Appendix D — per-slice spectral gaps vs static expanders")
+    topo = build_opera_topology(108, 6, seed=0)
+    gaps, means, maxes = [], [], []
+    for t in range(0, topo.num_slices, 4):
+        adj = topo.adjacency(t)
+        gaps.append(spectral_gap(adj))
+        m, mx, _ = mean_max_path(adj)
+        means.append(m)
+        maxes.append(mx)
+    stat = random_regular_expander(108, 5, seed=3)
+    sgap = spectral_gap(stat)
+    sm, smx, _ = mean_max_path(stat)
+    rb = ramanujan_bound(5)
+    print(f"  opera slices: gap {np.mean(gaps):.3f} (min {min(gaps):.3f}) "
+          f"mean path {np.mean(means):.2f} max {max(maxes)}")
+    print(f"  static d=5  : gap {sgap:.3f}  mean path {sm:.2f} max {smx}")
+    print(f"  ramanujan bound (d=5): {rb:.3f}")
+    ok2 = check("every slice within ~35% of the static expander's gap",
+                min(gaps) > 0.6 * sgap, f"min {min(gaps):.3f} vs {sgap:.3f}")
+    ok3 = check("Opera path length ~ best static (App. D)",
+                np.mean(means) - sm < 0.5)
+    return dict(
+        table1=table,
+        appD=dict(opera_gap_mean=float(np.mean(gaps)),
+                  opera_gap_min=float(min(gaps)), static_gap=sgap,
+                  ramanujan=rb, opera_mean_path=float(np.mean(means)),
+                  static_mean_path=sm),
+        checks=dict(table1=ok1, gaps=ok2, paths=ok3),
+    )
+
+
+if __name__ == "__main__":
+    save("table1_appD", run())

@@ -1,0 +1,64 @@
+"""Failure drill: worker dies mid-run -> detect -> shrink -> restore -> resume.
+
+The control-plane loop of DESIGN.md §3.2 (Opera's hello-protocol analog):
+heartbeats feed the FleetMonitor; on a missed-heartbeat failure the
+controller forms a RestartPlan (shrunk data axis), restores the latest
+elastic checkpoint, and resumes deterministically (data is step-indexed).
+
+    PYTHONPATH=src python examples/fault_tolerance_drill.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import reduced_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import init_params
+from repro.models.parallel import single_device_ctx
+from repro.optim.adamw import AdamWConfig
+from repro.train.checkpoint import Checkpointer
+from repro.train.health import FleetMonitor, HealthConfig, RestartPlan
+from repro.train.trainer import init_train_state, make_train_step
+
+cfg = reduced_config(get_config("yi-9b")).replace(vocab_size=128)
+params = init_params(cfg, jax.random.key(0))
+opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=40)
+step_fn = jax.jit(make_train_step(cfg, single_device_ctx(), opt))
+src = SyntheticLM(cfg.vocab_size, 32, 4, seed=0)
+
+with tempfile.TemporaryDirectory() as d:
+    ck = Checkpointer(d, keep=2)
+    mon = FleetMonitor([f"worker{i}" for i in range(8)],
+                       HealthConfig(timeout_steps=3))
+    state = init_train_state(cfg, params)
+    crashed = None
+    for i in range(40):
+        state, m = step_fn(state, jax.tree.map(jnp.asarray, src.batch_at(i)))
+        for w in list(mon.workers):
+            if w == "worker5" and i >= 12:
+                continue  # worker5 stops heartbeating at step 12
+            mon.heartbeat(w, i + 1, 1.0)
+        if (i + 1) % 10 == 0:
+            ck.save(i + 1, state, blocking=True)
+            print(f"step {i+1:3d}: checkpoint saved, loss {float(m['loss']):.3f}")
+        dead = mon.check(i + 1)["dead"]
+        if dead:
+            crashed = i + 1
+            print(f"step {i+1:3d}: DETECTED failure of {dead} "
+                  f"(missed {HealthConfig().timeout_steps} heartbeats)")
+            break
+
+    assert crashed is not None
+    plan = RestartPlan.from_failure(mon, ck.latest_step(),
+                                    devices_per_worker=4, model_axis=2)
+    print(f"restart plan: survivors={len(plan.surviving_workers)}, "
+          f"new mesh {plan.new_mesh_shape}, restore step {plan.restore_step}")
+    state, start = ck.restore(state, step=plan.restore_step)
+    for i in range(start, 40):
+        state, m = step_fn(state, jax.tree.map(jnp.asarray, src.batch_at(i)))
+    print(f"resumed {start} -> 40, final loss {float(m['loss']):.3f}")
+    assert np.isfinite(float(m["loss"]))
+print("fault_tolerance_drill OK")

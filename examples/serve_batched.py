@@ -1,0 +1,40 @@
+"""Serve a small model with batched requests (continuous batching).
+
+Three architectures from three families share the one engine: dense KV
+cache, Mamba recurrent state, and Griffin's hybrid window+LRU state.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import reduced_config
+from repro.models import init_params
+from repro.models.parallel import single_device_ctx
+from repro.serve.engine import Request, ServeEngine
+
+rng = np.random.default_rng(0)
+
+for arch in ("smollm-360m", "falcon-mamba-7b", "recurrentgemma-2b"):
+    cfg = reduced_config(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, single_device_ctx(), slots=4, max_seq=48)
+    t0 = time.time()
+    n_req = 8
+    for rid in range(n_req):
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, rng.integers(4, 12))
+            .astype(np.int32),
+            max_new_tokens=8,
+        ))
+    done = eng.run_to_completion(max_ticks=200)
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    assert len(done) == n_req
+    print(f"{arch:24s} ({cfg.family:6s}): {n_req} reqs, {toks} tokens in "
+          f"{dt:.1f}s — sample output {done[0].out_tokens}")
+print("serve_batched OK")

@@ -1,0 +1,128 @@
+"""Assemble the §Roofline table and §Perf log into EXPERIMENTS.md from the
+final dry-run artifacts (results/dryrun_v3)."""
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+V3 = ROOT / "results" / "dryrun_v3"
+
+import sys
+sys.path.insert(0, str(ROOT / "src"))
+from repro.analysis.roofline import fmt_table  # noqa: E402
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+
+
+def roofline_md() -> str:
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape not in cfg.shapes:
+                continue
+            f = V3 / f"{arch}__{shape}__pod.json"
+            if f.exists():
+                rows.append(json.loads(f.read_text())["roofline"])
+    lines = ["```", fmt_table(rows), "```", "",
+             "Skipped cells (assignment's sub-quadratic rule): "]
+    skips = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape not in cfg.shapes:
+                skips.append(f"{arch}×{shape}")
+    lines.append(", ".join(skips) + ".")
+    return "\n".join(lines)
+
+
+def _terms(name):
+    r = json.loads((V3 / f"{name}.json").read_text())["roofline"]
+    return (r["compute_s"], r["memory_s"], r["collective_s"],
+            r["useful_ratio"], r["mfu_at_floor"], r["dominant"])
+
+
+def perf_md() -> str:
+    def fmt(name):
+        c, m, k, u, f, d = _terms(name)
+        return f"compute {c:.3f}s / memory {m:.3f}s / coll {k:.4f}s (dom {d}, useful {u:.2f}, MFU@floor {f:.3f})"
+
+    out = []
+    out.append("**Iteration 0 (measurement substrate).** Three rounds of "
+               "hypothesis-driven *cost-model* fixes preceded the code "
+               "hillclimb, each exposed by a refuted prediction: (0a) XLA "
+               "cost_analysis counts scan bodies once → loop-aware trip "
+               "multiplication (validated vs unrolled HLO); (0b) scan "
+               "accumulators (dynamic-update-slice fusions) were charged "
+               "full-buffer×trip → in-place slice accounting (−17% memory "
+               "term fleet-wide); (0c) per-layer reads of scan-stacked "
+               "weights were charged the full stack → sliced-parameter "
+               "discount. A refuted hypothesis is as informative as a "
+               "confirmed one — here they were bugs in the ruler, not the "
+               "system.\n")
+
+    A0 = fmt("smollm-360m__train_4k__pod")
+    A1 = fmt("smollm-360m__train_4k__pod__iterA1")
+    A2 = fmt("smollm-360m__train_4k__pod__iterA2")
+    A3 = fmt("smollm-360m__train_4k__pod__iterA3")
+    out.append(f"""### Cell A — smollm-360m × train_4k (worst useful ratio)
+
+| iter | hypothesis | change | result | verdict |
+|---|---|---|---|---|
+| A0 | — | baseline (FSDP×TP) | {A0} | 15 Q / 5 KV heads don't divide tp=16 → reshape breaks head-dim sharding → attention replicated ×16 over `model` (napkin: (0.75+1.6)e15 × 16 ≈ measured HLO FLOPs ✓) |
+| A1 | repurpose `model` as data parallelism (batch 256 = 16×16 exactly); replication disappears | `--layout dp_only` | {A1} | **CONFIRMED** — memory ÷15, collective ÷60, MFU@floor ×15 |
+| A2 | remaining memory is logits CE materialization | `+ --loss-chunk 16384` | {A2} | **REFUTED** — bytes unchanged; profile shows chunked-attention accumulators + norm traffic dominate, logits are minor at vocab 49k/dev |
+| A3 | at 360M the remat recompute isn't worth it: saving activations cuts the backward's recompute passes | `--layout dp_only --remat none` | {A3} | **REFUTED for the floor** — compute −21% (≈ the −25% napkin) and useful ratio ↑0.46→0.58, but saved-activation traffic exceeds the recompute traffic it displaces: memory +22%. Keep A1. |
+""")
+
+    B0 = fmt("falcon-mamba-7b__decode_32k__pod")
+    B1 = fmt("falcon-mamba-7b__decode_32k__pod__iterB1")
+    B2 = fmt("falcon-mamba-7b__decode_32k__pod__iterB2")
+    out.append(f"""### Cell B — falcon-mamba-7b × decode_32k (most collective-bound)
+
+| iter | hypothesis | change | result | verdict |
+|---|---|---|---|---|
+| B0 | — | baseline | {B0} | collectives = 1.7 GB/dev of ALL-GATHERS = exactly the FSDP weight gathering (7.3e9×4×(15/16)/16 ≈ 1.7 GB ✓) — decode re-gathers weights every token |
+| B1 | keep weights resident TP-sharded (serving layout): gathers vanish | `--layout tp_only` | {B1} | **CONFIRMED for collectives** (÷57) but fp32 weight *reads* (1.8 GB/dev/token) now dominate memory |
+| B2 | store weights bf16 (production serving): halve resident reads, kill the fp32→bf16 convert traffic | `+ --param-dtype bfloat16` | {B2} | **REFUTED** — the converts vanish but bf16 params re-upcast at fp32 consumers (gates, A_log math), adding back what was saved. **B1 stands: step floor 0.0342 → 0.0116 s (2.9×)**, now memory-bound on resident weight reads — the correct regime for decode. |
+""")
+
+    C0 = fmt("qwen3-moe-30b-a3b__train_4k__pod")
+    C1 = fmt("qwen3-moe-30b-a3b__train_4k__pod__iterC1") if (V3 / "qwen3-moe-30b-a3b__train_4k__pod__iterC1.json").exists() else "n/a"
+    C2 = fmt("qwen3-moe-30b-a3b__train_4k__pod__iterC2")
+    C3 = fmt("qwen3-moe-30b-a3b__train_4k__pod__iterC3")
+    C4 = fmt("qwen3-moe-30b-a3b__train_4k__pod__iterC4")
+    out.append(f"""### Cell C — qwen3-moe-30b-a3b × train_4k (technique-representative)
+
+| iter | hypothesis | change | result | verdict |
+|---|---|---|---|---|
+| C0 | — | baseline (rotor A2A dispatch) | {C0} | memory-dominant; profile: fp32 residual-stream passes in the rematted backward + MoE dispatch buffers |
+| C1 | logits CE (B,S,V) materialization drives memory | `--loss-chunk 19456` | {C1 if isinstance(C1, str) else C1} | **REFUTED** — memory ~flat, compute +45% (chunk recompute); logits ≈ 2.5 GB/dev ≪ 35 TB of residual traffic |
+| C2 | fp32 norm materialization doubles residual traffic; keep reductions fp32, normalize in bf16 | `--norm-upcast 0` | {C2} | **REFUTED** — no measurable change: the fp32 traffic originates in autodiff of the fp32 reductions + the saved bf16 carry chain, not in the normalize materialization choice. |
+| C3 | sequence-parallel activations shrink per-device residual/saved tensors ×16 | `--act-sharding sp` | {C3} | **REFUTED** — chunked-attention reshapes break seq sharding → gathers+replication: memory ×2, collective ×9. SP needs a seq-aware attention partition, not a constraint bolt-on |
+| C4 | A/B the paper technique itself: rotor A2A vs native all-to-all move the same bytes (the direct one-hop schedule is tax-free either way) | `--moe-dispatch xla` | {C4} | **CONFIRMED, beyond-paper** — collective term IDENTICAL (8.2108 s both: zero-tax parity exactly as the schedule theory predicts) while the fused native a2a avoids ~17% of buffer-staging memory traffic (floor 25.52 → 21.15 s). On a real rotor fabric the ppermute schedule is the *only* option; on a fixed torus ICI, prefer the fused op and keep the rotor schedule for the fabrics that need it. |
+""")
+    out.append("""### Outcome summary (step-time floor = max roofline term)
+
+| cell | baseline | best | gain | stopping rule |
+|---|---|---|---|---|
+| smollm-360m × train_4k | 55.33 s (memory) | **3.58 s** (A1) | **15.5×** | A2 +0.4%, A3 −22% → stopped |
+| falcon-mamba-7b × decode_32k | 0.0342 s (collective) | **0.0116 s** (B1) | **2.9×** | B2 regressed → stopped |
+| qwen3-moe-30b-a3b × train_4k | 25.52 s (memory) | **21.15 s** (C4) | **1.21×** | C1/C2 ≈0%, C3 regressed → stopped |
+
+Paper-faithful baseline and beyond-paper optimized variants are SEPARATE
+artifacts (`__pod.json` vs `__pod__iter*.json`) per the assignment: the
+baselines carry the rotor schedules exactly as Opera prescribes; the
+optimized variants change sharding layout / dispatch fusion — levers the
+paper doesn't discuss.""")
+    return "\n".join(out)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_md())
+    md = md.replace("<!-- PERF_LOG -->", perf_md())
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md finalized")
+
+
+if __name__ == "__main__":
+    main()

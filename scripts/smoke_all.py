@@ -1,0 +1,68 @@
+"""Dev driver: run reduced-config fwd/train/prefill/decode for all archs."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import list_archs, get_config
+from repro.configs.base import reduced_config
+from repro.models import (
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_params,
+    loss_fn,
+)
+from repro.models.kvcache import init_cache
+from repro.models.parallel import single_device_ctx
+
+only = sys.argv[1:] if len(sys.argv) > 1 else None
+pctx = single_device_ctx()
+rng = np.random.default_rng(0)
+B, S = 2, 16
+
+for arch in list_archs():
+    if only and arch not in only:
+        continue
+    cfg = reduced_config(get_config(arch))
+    key = jax.random.key(0)
+    params = init_params(cfg, key)
+    nparams = sum(x.size for x in jax.tree.leaves(params))
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["encoder_embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16
+        )
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_image_tokens, cfg.d_model)), jnp.bfloat16
+        )
+
+    # train fwd + grad
+    (total, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg, pctx), has_aux=True
+    )(params)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    assert jnp.isfinite(total), f"{arch}: non-finite loss"
+    assert jnp.isfinite(gnorm), f"{arch}: non-finite grads"
+
+    # prefill + decode
+    logits_p, caches = forward_prefill(params, batch, cfg, pctx)
+    assert logits_p.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits_p.astype(jnp.float32)).all()
+    tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    logits_d, caches2 = forward_decode(params, tok, pos, caches, cfg, pctx)
+    assert logits_d.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits_d.astype(jnp.float32)).all()
+    print(
+        f"ok {arch:24s} params={nparams:>9,} loss={float(metrics['loss']):.3f} "
+        f"gnorm={float(gnorm):.3f}"
+    )
+print("ALL ARCH SMOKE PASSED")

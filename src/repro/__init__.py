@@ -1,0 +1,8 @@
+"""repro — Opera ("Expanding across time", Mellette et al. 2019) in JAX.
+
+A multi-pod training/serving framework whose communication layer is the
+paper's time-expanded rotor/expander scheduling, plus a flow-level network
+simulator reproducing the paper's own evaluation.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,77 @@
+"""Post-optimization HLO parsing: per-device collective wire bytes.
+
+GSPMD-inserted collectives only exist *after* partitioning, so we parse
+``compiled.as_text()`` (the per-device SPMD module).  For each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op we take the RESULT shape bytes as the per-device wire-byte proxy
+(all-reduce/all-to-all/permute: payload size; all-gather: bytes received;
+reduce-scatter: bytes retained after reducing N-1 remote shards).  Tuple
+results (variadic collectives) sum their components.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[16,512]{1,0}" or "f32[]"
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "%x.1 = <type> <op>(" where op is a collective (possibly -start/-done)
+_LINE_RE = re.compile(
+    r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\("
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (+ op counts)."""
+    by_kind: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for m in _LINE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        b = _type_bytes(type_str)
+        by_kind[kind] += b
+        counts[kind] += 1
+    out = {f"bytes_{k}": v for k, v in by_kind.items()}
+    out.update({f"count_{k}": float(v) for k, v in counts.items()})
+    out["bytes_total"] = float(sum(by_kind.values()))
+    out["count_total"] = float(sum(counts.values()))
+    return dict(out)
+
+
+def collective_breakdown_table(hlo_text: str) -> str:
+    d = collective_bytes(hlo_text)
+    rows = ["kind            count       bytes"]
+    for k in _COLLECTIVES:
+        c = int(d.get(f"count_{k}", 0))
+        b = d.get(f"bytes_{k}", 0.0)
+        if c:
+            rows.append(f"{k:15s} {c:5d} {b:12.3e}")
+    rows.append(f"{'TOTAL':15s} {int(d['count_total']):5d} {d['bytes_total']:12.3e}")
+    return "\n".join(rows)

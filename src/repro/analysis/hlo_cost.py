@@ -1,0 +1,392 @@
+"""Loop-aware HLO cost model.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every instruction ONCE,
+so anything inside a ``while`` loop (every ``lax.scan`` — our layer stacks,
+chunked attention, SSM chunk scans) is undercounted by its trip count, and
+collectives inside scanned layers are likewise missed by naive text
+grepping.  This module parses the post-optimization HLO text into its
+computation graph and computes, bottom-up:
+
+    flops       — dot (2*out*contract), elementwise (1/elem), reduce
+    bytes       — operand+output bytes at thunk level; fusions count only
+                  their boundary (operands+output), matching HloCostAnalysis
+    coll_bytes  — per-kind wire bytes of collective ops
+
+with ``while`` costs multiplied by the trip count recovered from the loop
+condition (scan-generated loops compare an induction variable against a
+constant).  Validated against unrolled references in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "tanh", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "compare", "select", "clamp",
+    "and", "or", "xor", "not", "sine", "cosine", "tan", "atan2", "logistic",
+    "remainder", "is-finite", "erf", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "popcnt",
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_ZERO_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "iota",
+    "get-dimension-size", "custom-call",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # operand list + attributes (raw tail of the line)
+
+    @property
+    def operands(self) -> List[str]:
+        # operands live before the closing paren of the op call; attributes
+        # follow — but operand names are unambiguous %refs in the tail's
+        # first paren group.  We scan up to the matching close paren.
+        depth = 1
+        out = []
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    out = _OPERAND_RE.findall(self.rest[:i])
+                    break
+        return out
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+    root_opcode: str = ""
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(2))
+                # parameters appear as instrs too; types captured there
+            continue
+        s = line.strip()
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.types[ins.name] = ins.type_str
+            if s.startswith("ROOT"):
+                cur.root_opcode = ins.opcode
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+
+def _sliced_param_bytes(comp: Computation) -> Dict[int, int]:
+    """Parameters of a fused computation whose ONLY uses are
+    dynamic-slice/gather: return {param_index: total sliced bytes}."""
+    params: Dict[str, int] = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                params[ins.name] = int(m.group(1))
+    out: Dict[int, int] = {}
+    use_ok: Dict[str, bool] = {n: True for n in params}
+    sliced: Dict[str, int] = {n: 0 for n in params}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            continue
+        ops = ins.operands
+        for n in params:
+            if n in ops:
+                if ins.opcode in ("dynamic-slice", "gather") and ops and ops[0] == n:
+                    _, b = _shape_elems_bytes(ins.type_str)
+                    sliced[n] += b
+                else:
+                    use_ok[n] = False
+    for n, idx in params.items():
+        if use_ok[n] and sliced[n] > 0:
+            out[idx] = sliced[n]
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = []
+    for ins in cond.instrs:
+        consts += [int(c) for c in _CONST_RE.findall(ins.rest)]
+        consts += [int(c) for c in _CONST_RE.findall(ins.opcode)] if False else []
+    # also catch "constant(N)" appearing as its own instruction:
+    return max(consts) if consts else 1
+
+
+def _instr_cost(
+    ins: Instr, comp: Computation, comps: Dict[str, Computation],
+    memo: Dict[str, Cost], in_fusion: bool,
+) -> Cost:
+    c = Cost()
+    op = ins.opcode
+    base = op[:-6] if op.endswith("-start") else op
+    out_elems, out_bytes = _shape_elems_bytes(ins.type_str)
+
+    # ---- flops ----
+    if base == "dot":
+        lhs_name = ins.operands[0] if ins.operands else None
+        contract = 1
+        if lhs_name and lhs_name in comp.types:
+            dims_str = _LHS_CDIMS.search(ins.rest)
+            m = _ARRAY_RE.search(comp.types[lhs_name])
+            if dims_str and m:
+                shape = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+                for di in (int(x) for x in dims_str.group(1).split(",") if x):
+                    if di < len(shape):
+                        contract *= shape[di]
+        c.flops += 2.0 * out_elems * contract
+    elif base in _ELEMWISE:
+        c.flops += float(out_elems)
+    elif base in ("reduce", "reduce-window"):
+        in_elems = 0
+        for opn in ins.operands:
+            e, _ = _shape_elems_bytes(comp.types.get(opn, ""))
+            in_elems += e
+        c.flops += float(in_elems)
+    elif base == "convolution":
+        c.flops += 2.0 * out_elems  # lower bound; convs unused in this repo
+
+    # ---- bytes ----
+    if not in_fusion and base not in _ZERO_BYTES:
+        ops_b = [
+            _shape_elems_bytes(comp.types.get(opn, ""))[1]
+            for opn in ins.operands
+        ]
+        # operands that the fused computation only ever *slices* (the
+        # per-layer parameter reads of a scan over stacked weights) are
+        # charged at slice size, not full-buffer size
+        if base == "fusion":
+            mm = _CALLS_RE.search(ins.rest)
+            if mm and mm.group(1) in comps:
+                sliced = _sliced_param_bytes(comps[mm.group(1)])
+                for i in range(min(len(ops_b), 16)):
+                    if i in sliced:
+                        ops_b[i] = min(ops_b[i], sliced[i])
+        opb = sum(ops_b)
+        # in-place update semantics: a dynamic-update-slice (raw or as a
+        # fusion root, i.e. every lax.scan accumulator / KV-cache write)
+        # touches only the updated slice, not the whole buffer — XLA
+        # aliases input/output.  Without this, scan output collection is
+        # counted quadratically (trip x full buffer) and swamps the
+        # memory roofline term (see EXPERIMENTS.md §Perf, iteration 0).
+        rooted = base
+        if base == "fusion":
+            mm = _CALLS_RE.search(ins.rest)
+            if mm and mm.group(1) in comps:
+                rooted = comps[mm.group(1)].root_opcode
+        if rooted == "dynamic-update-slice" and ops_b:
+            update = max(opb - max(ops_b), 0)
+            c.bytes += 2.0 * update  # read update, write slice
+        elif rooted in ("dynamic-slice", "gather"):
+            c.bytes += 2.0 * out_bytes  # read slice, write out
+        else:
+            c.bytes += opb + out_bytes
+
+    # ---- collectives ----
+    if base in _COLLECTIVES:
+        c.coll[base] = c.coll.get(base, 0.0) + out_bytes
+        c.coll_counts[base] = c.coll_counts.get(base, 0.0) + 1
+
+    # ---- called computations ----
+    if base == "fusion":
+        m = _CALLS_RE.search(ins.rest)
+        if m and m.group(1) in comps:
+            sub = _comp_cost(comps[m.group(1)], comps, memo, in_fusion=True)
+            c.flops += sub.flops
+            # fusion bytes = boundary only (already counted above)
+            for k, v in sub.coll.items():
+                c.coll[k] = c.coll.get(k, 0.0) + v
+    elif base == "while":
+        mb, mc = _BODY_RE.search(ins.rest), _COND_RE.search(ins.rest)
+        if mb and mb.group(1) in comps:
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            elif mc and mc.group(1) in comps:
+                trip = _trip_count(comps[mc.group(1)])
+            else:
+                trip = 1
+            body = _comp_cost(comps[mb.group(1)], comps, memo, in_fusion)
+            c.add(body, mult=float(trip))
+    elif base in ("call", "async-start", "conditional"):
+        for m in _CALLS_RE.finditer(ins.rest):
+            if m.group(1) in comps:
+                c.add(_comp_cost(comps[m.group(1)], comps, memo, in_fusion))
+    # reduce's to_apply is per-element scalar math; covered by in_elems.
+    return c
+
+
+def _comp_cost(
+    comp: Computation, comps: Dict[str, Computation],
+    memo: Dict[str, Cost], in_fusion: bool = False,
+) -> Cost:
+    key = f"{comp.name}|{in_fusion}"
+    if key in memo:
+        return memo[key]
+    total = Cost()
+    memo[key] = total  # break cycles defensively
+    for ins in comp.instrs:
+        total.add(_instr_cost(ins, comp, comps, memo, in_fusion))
+    return total
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware per-device cost of the entry computation."""
+    comps = parse_hlo(hlo_text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    if m:
+        entry = comps.get(m.group(1))
+    if entry is None:  # fall back: the largest computation
+        entry = max(comps.values(), key=lambda c: len(c.instrs))
+    memo: Dict[str, Cost] = {}
+    c = _comp_cost(entry, comps, memo)
+    out = {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "coll_bytes_total": float(sum(c.coll.values())),
+        "coll_count_total": float(sum(c.coll_counts.values())),
+    }
+    for k, v in c.coll.items():
+        out[f"coll_bytes_{k}"] = v
+    for k, v in c.coll_counts.items():
+        out[f"coll_count_{k}"] = v
+    return out
+
+
+def top_instructions(hlo_text: str, k: int = 20):
+    """Heaviest instructions by loop-multiplied bytes (profile substitute).
+
+    Walks the computation graph with the same trip-count multipliers as
+    analyze(), attributing each thunk-level instruction's bytes/flops,
+    and returns the top-k — the dry-run analog of a memory profile.
+    """
+    comps = parse_hlo(hlo_text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    if m:
+        entry = comps.get(m.group(1))
+    if entry is None:
+        entry = max(comps.values(), key=lambda c: len(c.instrs))
+
+    rows = []
+
+    def walk(comp: Computation, mult: float, in_fusion: bool):
+        for ins in comp.instrs:
+            base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+            c = Cost()
+            # per-instruction own cost (no recursion)
+            out_elems, out_bytes = _shape_elems_bytes(ins.type_str)
+            if not in_fusion and base not in _ZERO_BYTES:
+                opb = sum(
+                    _shape_elems_bytes(comp.types.get(o, ""))[1]
+                    for o in ins.operands
+                )
+                c.bytes = opb + out_bytes
+            if base == "fusion":
+                mm = _CALLS_RE.search(ins.rest)
+                if mm and mm.group(1) in comps:
+                    sub = _comp_cost(comps[mm.group(1)], comps, {}, True)
+                    c.flops += sub.flops
+            if c.bytes or c.flops:
+                meta = re.search(r'op_name="([^"]*)"', ins.rest)
+                rows.append(dict(
+                    name=ins.name, op=base, mult=mult,
+                    bytes=c.bytes * mult, flops=c.flops * mult,
+                    op_name=meta.group(1)[-90:] if meta else "",
+                ))
+            if base == "while":
+                mb = _BODY_RE.search(ins.rest)
+                mc = _COND_RE.search(ins.rest)
+                mt = _TRIP_RE.search(ins.rest)
+                trip = int(mt.group(1)) if mt else (
+                    _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                )
+                if mb and mb.group(1) in comps:
+                    walk(comps[mb.group(1)], mult * trip, in_fusion)
+            elif base in ("call", "conditional"):
+                for mm in _CALLS_RE.finditer(ins.rest):
+                    if mm.group(1) in comps:
+                        walk(comps[mm.group(1)], mult, in_fusion)
+
+    walk(entry, 1.0, False)
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]

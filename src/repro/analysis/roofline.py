@@ -1,0 +1,112 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e constants).
+
+    compute    = HLO_FLOPs_per_device   / 197e12   [s]
+    memory     = HLO_bytes_per_device   / 819e9    [s]
+    collective = wire_bytes_per_device  / 50e9     [s]  (per-ICI-link model)
+
+All three are per-device quantities over per-chip rates, i.e. exactly
+FLOPs_total/(chips*peak) etc. since SPMD devices are symmetric.  The
+dominant term is the projected step-time floor; roofline fraction =
+dominant / sum proxies how far from balanced the cell is.  MODEL_FLOPS
+(6*N*D train, 2*N*D decode/prefill forward) over HLO FLOPs measures how
+much compiled compute is "useful" (catches remat/causal-mask/dispatch
+waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / ICI link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_total: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops_per_device / PEAK_FLOPS
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_floor_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_at_floor(self) -> float:
+        """Model FLOPs / (chips * peak * step_floor): the MFU the compiled
+        program would achieve if it ran exactly at the roofline floor."""
+        denom = self.chips * PEAK_FLOPS * self.step_floor_s
+        return self.model_flops_total / denom if denom else 0.0
+
+    def row(self) -> Dict:
+        return dict(
+            arch=self.arch,
+            shape=self.shape,
+            mesh=self.mesh,
+            chips=self.chips,
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            model_flops=self.model_flops_total,
+            hlo_flops_total=self.flops_per_device * self.chips,
+            useful_ratio=self.useful_flops_ratio,
+            mfu_at_floor=self.mfu_at_floor,
+        )
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """6*N*D for train, 2*N*D for forward-only (prefill), 2*N per token
+    for decode (D = tokens processed)."""
+    B, S = shape.global_batch, shape.seq_len
+    n = n_active or n_params
+    if shape.kind == "train":
+        return 6.0 * n * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n * B * S
+    return 2.0 * n * B  # decode: one token per sequence
+
+
+def fmt_table(rows) -> str:
+    hdr = (
+        f"{'arch':24s} {'shape':12s} {'mesh':9s} {'compute':>10s} "
+        f"{'memory':>10s} {'collective':>11s} {'dominant':>10s} "
+        f"{'useful':>7s} {'MFU@floor':>9s}"
+    )
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:11.4f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.3f} {r['mfu_at_floor']:9.3f}"
+        )
+    return "\n".join(out)

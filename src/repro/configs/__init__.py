@@ -1,0 +1,38 @@
+"""Architecture registry. Importing this package registers all configs."""
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    falcon_mamba_7b,
+    llama32_vision_90b,
+    opera_paper,
+    qwen15_110b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_2b,
+    seamless_m4t_large_v2,
+    smollm_360m,
+    stablelm_12b,
+    yi_9b,
+)
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    all_cells,
+    get_config,
+    input_specs,
+    list_archs,
+    runnable_shapes,
+)
+
+ALL_ARCHS = (
+    "qwen3-moe-30b-a3b",
+    "deepseek-moe-16b",
+    "falcon-mamba-7b",
+    "seamless-m4t-large-v2",
+    "recurrentgemma-2b",
+    "llama-3.2-vision-90b",
+    "smollm-360m",
+    "yi-9b",
+    "qwen1.5-110b",
+    "stablelm-12b",
+)

@@ -1,0 +1,11 @@
+"""Opera core: topology generation, schedules, routing, rotor collectives."""
+from repro.core.classify import Classifier, TrafficClass  # noqa: F401
+from repro.core.topology import (  # noqa: F401
+    OperaTopology,
+    build_opera_topology,
+    lift_matchings,
+    random_matchings,
+    rotor_schedule,
+    sum_matchings,
+    verify_factorization,
+)

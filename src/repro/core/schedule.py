@@ -1,0 +1,121 @@
+"""Cycle-time model (§4.1, §3.5, Appendix B).
+
+Reproduces the paper's timing arithmetic for any design point:
+
+  epsilon  = worst-case end-to-end delay under worst-case queuing
+  slice    = epsilon + r                      (r = reconfiguration delay)
+  per-switch period = (u/groups) * slice      ("about 6 eps" for the 648-host point)
+  duty cycle = 1 - r / per-switch period      (98 %)
+  cycle    = num_slices * slice               (10.7 ms)
+  bulk cutoff ~ link_rate * cycle             (flows that amortize one cycle)
+
+plus the guard-band sensitivities quoted in §3.5 (1 %/us low-latency,
+0.2 %/us bulk).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.opera_paper import OperaNetConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CycleTiming:
+    epsilon_us: float
+    reconfig_us: float
+    slice_us: float
+    per_switch_period_us: float
+    duty_cycle: float
+    num_slices: int
+    cycle_ms: float
+    bulk_cutoff_mb: float
+    ll_capacity_loss_per_guard_us: float
+    bulk_capacity_loss_per_guard_us: float
+
+
+def epsilon_us(
+    worst_hops: int,
+    queue_bytes: int,
+    link_rate_gbps: float,
+    prop_delay_us: float,
+    mtu: int = 1500,
+) -> float:
+    """Worst-case end-to-end delay: at each of `worst_hops` ToR-to-ToR hops
+    a packet may wait behind a full shallow queue, plus serialization and
+    propagation. (§4.1: 24 KB queue, 5 hops, 500 ns, 10 Gb/s -> 90 us.)"""
+    drain_us = queue_bytes * 8 / (link_rate_gbps * 1e3)  # us
+    ser_us = mtu * 8 / (link_rate_gbps * 1e3)
+    # the paper quotes 90 us for 5 hops; per-hop budget is dominated by the
+    # queue drain (19.2 us) — the residual is propagation+serialization.
+    per_hop = drain_us - ser_us + prop_delay_us + ser_us
+    return worst_hops * per_hop
+
+
+def cycle_timing(cfg: OperaNetConfig, worst_hops: int = 5) -> CycleTiming:
+    eps = epsilon_us(
+        worst_hops, cfg.queue_bytes, cfg.link_rate_gbps, cfg.prop_delay_us, cfg.mtu
+    )
+    slice_us = eps + cfg.reconfig_delay_us
+    rounds = cfg.u // cfg.groups
+    per_switch = rounds * slice_us
+    duty = 1.0 - cfg.reconfig_delay_us / per_switch
+    num_slices = cfg.num_racks * cfg.u // cfg.u // cfg.groups  # N/groups
+    num_slices = cfg.num_racks // cfg.groups
+    cycle_ms = num_slices * slice_us / 1e3
+    # a bulk flow must amortize waiting <= one cycle for its direct slice:
+    # FCT within 2x ideal requires size/rate >= cycle (§4.1 -> ~15 MB).
+    cutoff_mb = cfg.link_rate_gbps * 1e9 / 8 * (cycle_ms / 1e3) / 2**20
+    return CycleTiming(
+        epsilon_us=eps,
+        reconfig_us=cfg.reconfig_delay_us,
+        slice_us=slice_us,
+        per_switch_period_us=per_switch,
+        duty_cycle=duty,
+        num_slices=num_slices,
+        cycle_ms=cycle_ms,
+        bulk_cutoff_mb=cutoff_mb,
+        # each us of guard band removes g/slice of low-latency airtime ...
+        ll_capacity_loss_per_guard_us=1.0 / slice_us,
+        # ... and g/per_switch_period of a circuit's bulk airtime
+        bulk_capacity_loss_per_guard_us=1.0 / per_switch,
+    )
+
+
+def scaled_cycle_table(k_values=(12, 24, 36, 48, 64), groups_of: int = 6) -> list:
+    """Appendix B: grouped reconfiguration keeps cycle time ~linear in k.
+
+    k-radix ToR -> u = k/2 switches, N = racks scale ~ (k/2)*(k/2)*3 (the
+    paper's 648-host k=12 -> 108-rack point scales to 98,304 hosts at
+    k=64).  We reproduce the relative-cycle-time trend of Fig. 14."""
+    rows = []
+    base = None
+    for k in k_values:
+        u = k // 2
+        scale = (k // 12) ** 2
+        racks = 108 * scale
+        groups = max(1, u // groups_of)
+        cfg = OperaNetConfig(
+            name=f"opera-k{k}",
+            k=k,
+            num_racks=racks,
+            hosts_per_rack=k // 2,
+            num_circuit_switches=u,
+            groups=groups,
+        )
+        t = cycle_timing(cfg)
+        if base is None:
+            base = t.cycle_ms
+        rows.append(
+            dict(
+                k=k,
+                racks=racks,
+                hosts=racks * (k // 2),
+                switches=u,
+                groups=groups,
+                cycle_ms=t.cycle_ms,
+                relative_cycle=t.cycle_ms / base,
+                bulk_cutoff_mb=t.bulk_cutoff_mb,
+            )
+        )
+    return rows

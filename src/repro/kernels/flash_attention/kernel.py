@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention kernel (forward), GQA + causal + window.
+
+TPU adaptation (DESIGN.md §3.3): HBM->VMEM streaming of K/V blocks with
+the online-softmax accumulator held in VMEM scratch; the grid is
+(batch*heads, q_blocks, kv_blocks) with the kv dimension innermost so the
+scratch carries across sequential kv steps; block shapes are multiples of
+128 on the lane dimension so Q@K^T and P@V land on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,           # VMEM blocks
+    o_ref,                         # output block
+    m_ref, l_ref, acc_ref,         # scratch
+    *, scale: float, causal: bool, window: int,
+    block_q: int, block_k: int, nk: int, q_offset: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                           # (bq, bk)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,    # (BH, Sq, hd) — heads folded by ops.py
+    k: jnp.ndarray,    # (BHkv, Sk, hd)
+    v: jnp.ndarray,
+    group: int,        # Hq // Hkv (BH row -> BHkv row mapping)
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    nq = Sq // block_q
+    nk = Sk // block_k
+    grid = (BH, nq, nk)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=hd**-0.5,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        nk=nk,
+        q_offset=Sk - Sq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec(
+                (1, block_k, hd),
+                lambda bh, iq, ik, g=group: (bh // g, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_k, hd),
+                lambda bh, iq, ik, g=group: (bh // g, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _pick_block(s: int, target: int) -> int:
+    b = min(target, s)
+    while s % b:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,   # (B, Hq, Sq, hd)
+    k: jnp.ndarray,   # (B, Hkv, Sk, hd)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Sk, block_k)
+    qf = q.reshape(B * Hq, Sq, hd)
+    kf = k.reshape(B * Hkv, Sk, hd)
+    vf = v.reshape(B * Hkv, Sk, hd)
+    o = flash_attention_fwd(
+        qf, kf, vf, group=g, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return o.reshape(B, Hq, Sq, hd)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,   # (B, Hq, Sq, hd)
+    k: jnp.ndarray,   # (B, Hkv, Sk, hd)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * hd**-0.5
+    qpos = jnp.arange(Sq) + (Sk - Sq)  # right-aligned query positions
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""Pallas TPU selective-scan kernel (Mamba-1 core).
+
+TPU adaptation: the GPU implementation parallelizes over (B, D) threads
+with registers carrying h; on TPU we tile D into VMEM-sized blocks
+(grid = (B, D/bd, S/bs)) with the (bd, N) state carried in VMEM scratch
+across sequential seq-chunk grid steps, and the within-chunk recurrence
+unrolled over the chunk as (bd, N)-shaped VPU ops.  dA/dBx are computed
+on the fly in VMEM — the (B, S, D, N) discretized tensors never touch
+HBM (the reason a fused kernel exists at all).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref,
+            *, block_s: int):
+    ks = pl.program_id(2)
+
+    @pl.when(ks == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)      # (bs, bd)
+    dt = dt_ref[0].astype(jnp.float32)    # (bs, bd)
+    Bm = b_ref[0].astype(jnp.float32)     # (bs, N)
+    Cm = c_ref[0].astype(jnp.float32)     # (bs, N)
+    A = a_ref[...].astype(jnp.float32)    # (bd, N)
+    D = d_ref[...].astype(jnp.float32)    # (1, bd)
+
+    def step(t, carry):
+        h, ys = carry
+        dA = jnp.exp(dt[t][:, None] * A)                    # (bd, N)
+        dBx = (dt[t] * x[t])[:, None] * Bm[t][None, :]      # (bd, N)
+        h = dA * h + dBx
+        y = (h * Cm[t][None, :]).sum(axis=1)                # (bd,)
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y[None], t, axis=0)
+        return h, ys
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros((block_s, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, block_s, step, (h0, ys0))
+    h_ref[...] = h
+    y_ref[0] = (ys + x * D).astype(y_ref.dtype)
+
+
+def mamba_scan_fwd(
+    x: jnp.ndarray, dt: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray,
+    A: jnp.ndarray, D: jnp.ndarray,
+    block_d: int, block_s: int, interpret: bool,
+) -> jnp.ndarray:
+    Bsz, S, Dd = x.shape
+    N = A.shape[1]
+    nd = Dd // block_d
+    ns = S // block_s
+    grid = (Bsz, nd, ns)  # seq innermost: h carried across seq chunks
+
+    kernel = functools.partial(_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_s, N), lambda b, d, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, N), lambda b, d, s: (b, s, 0)),
+            pl.BlockSpec((block_d, N), lambda b, d, s: (d, 0)),
+            pl.BlockSpec((1, block_d), lambda b, d, s: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, S, Dd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, A, D.reshape(1, Dd))

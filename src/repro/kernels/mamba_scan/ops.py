@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_fwd
+
+
+def _pick(s: int, target: int) -> int:
+    b = min(target, s)
+    while s % b:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_d", "block_s", "interpret")
+)
+def mamba_scan(
+    x: jnp.ndarray,    # (B, S, D)
+    dt: jnp.ndarray,   # (B, S, D)
+    Bm: jnp.ndarray,   # (B, S, N)
+    Cm: jnp.ndarray,   # (B, S, N)
+    A: jnp.ndarray,    # (D, N)
+    D: jnp.ndarray,    # (D,)
+    block_d: int = 512,
+    block_s: int = 64,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bd = _pick(x.shape[2], block_d)
+    bs = _pick(x.shape[1], block_s)
+    return mamba_scan_fwd(x, dt, Bm, Cm, A, D, block_d=bd, block_s=bs,
+                          interpret=interpret)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(
+    x: jnp.ndarray,    # (B, S, D)  conv+silu'd inputs
+    dt: jnp.ndarray,   # (B, S, D)  softplus'd step sizes
+    Bm: jnp.ndarray,   # (B, S, N)
+    Cm: jnp.ndarray,   # (B, S, N)
+    A: jnp.ndarray,    # (D, N)     negative
+    D: jnp.ndarray,    # (D,)
+) -> jnp.ndarray:
+    """Sequential reference: h_t = exp(dt_t*A) h_{t-1} + dt_t*B_t*x_t;
+    y_t = C_t . h_t + D*x_t.  Returns (B, S, D) float32."""
+    Bsz, S, Dd = x.shape
+    N = A.shape[1]
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    B32 = Bm.astype(jnp.float32)
+    C32 = Cm.astype(jnp.float32)
+    h = jnp.zeros((Bsz, Dd, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt32[:, t, :, None] * A)                     # (B,D,N)
+        dBx = (dt32[:, t] * x32[:, t])[..., None] * B32[:, t, None, :]
+        h = dA * h + dBx
+        ys.append(jnp.einsum("bdn,bn->bd", h, C32[:, t]))
+    y = jnp.stack(ys, axis=1)
+    return y + x32 * D

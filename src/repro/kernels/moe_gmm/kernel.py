@@ -1,0 +1,66 @@
+"""Pallas TPU grouped expert-FFN GEMM (MegaBlocks-style, capacity layout).
+
+One fused kernel computes silu(h@Wg) * (h@Wu) @ Wd for every expert's
+capacity-padded token buffer.  Grid (E, C/bc, F/bf): for each (expert,
+token-block) the F dimension is walked innermost, accumulating the
+down-projection into VMEM scratch so the (bc, F) activation never
+round-trips to HBM.  All matmul tiles are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(h_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, nf: int):
+    kf = pl.program_id(2)
+
+    @pl.when(kf == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = h_ref[0].astype(jnp.float32)        # (bc, D)
+    wg = wg_ref[0].astype(jnp.float32)      # (D, bf)
+    wu = wu_ref[0].astype(jnp.float32)
+    wd = wd_ref[0].astype(jnp.float32)      # (bf, D)
+
+    g = jax.lax.dot(h, wg, preferred_element_type=jnp.float32)
+    u = jax.lax.dot(h, wu, preferred_element_type=jnp.float32)
+    act = jax.nn.silu(g) * u                # (bc, bf)
+    acc_ref[...] += jax.lax.dot(act, wd, preferred_element_type=jnp.float32)
+
+    @pl.when(kf == nf - 1)
+    def _final():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm_fwd(
+    h: jnp.ndarray,   # (E, C, D)
+    wg: jnp.ndarray,  # (E, D, F)
+    wu: jnp.ndarray,
+    wd: jnp.ndarray,  # (E, F, D)
+    block_c: int, block_f: int, interpret: bool,
+) -> jnp.ndarray:
+    E, C, D = h.shape
+    F = wg.shape[2]
+    nf = F // block_f
+    grid = (E, C // block_c, nf)
+    kernel = functools.partial(_kernel, nf=nf)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
+            pl.BlockSpec((1, D, block_f), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, D, block_f), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, block_f, D), lambda e, c, f: (e, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), h.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, D), jnp.float32)],
+        interpret=interpret,
+    )(h, wg, wu, wd)

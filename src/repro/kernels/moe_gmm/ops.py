@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the grouped expert GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.kernel import moe_gmm_fwd
+
+
+def _pick(s: int, target: int) -> int:
+    b = min(target, s)
+    while s % b:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "interpret"))
+def moe_gmm(
+    h: jnp.ndarray,   # (E, C, D)
+    wg: jnp.ndarray,  # (E, D, F)
+    wu: jnp.ndarray,
+    wd: jnp.ndarray,  # (E, F, D)
+    block_c: int = 128,
+    block_f: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bc = _pick(h.shape[1], block_c)
+    bf = _pick(wg.shape[2], block_f)
+    return moe_gmm_fwd(h, wg, wu, wd, block_c=bc, block_f=bf,
+                       interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(h: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                wd: jnp.ndarray) -> jnp.ndarray:
+    """Gated per-expert FFN over capacity-padded buffers.
+
+    h: (E, C, D); wg/wu: (E, D, F); wd: (E, F, D).  Returns (E, C, D).
+    """
+    h32 = h.astype(jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", h32, wg.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", h32, wu.astype(jnp.float32))
+    act = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", act, wd.astype(jnp.float32)).astype(h.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.rglru_scan.ops import rglru_scan  # noqa: F401
+from repro.kernels.rglru_scan.ref import rglru_scan_ref  # noqa: F401

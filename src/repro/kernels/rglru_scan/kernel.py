@@ -1,0 +1,61 @@
+"""Pallas TPU kernel for the RG-LRU diagonal linear recurrence.
+
+Grid (B, D/bd, S/bs); (1, bd) state in VMEM scratch carried across the
+sequential seq-chunk steps; the within-chunk recurrence runs as bd-wide
+VPU ops.  Gates (a, bx) are computed upstream (they are plain matmuls +
+elementwise, which XLA fuses well); the kernel owns only the part XLA
+serializes poorly — the length-S dependent chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, out_ref, h_ref, *, block_s: int):
+    ks = pl.program_id(2)
+
+    @pl.when(ks == 0)
+    def _init():
+        h_ref[...] = h0_ref[0][None].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)   # (bs, bd)
+    b = b_ref[0].astype(jnp.float32)   # (bs, bd)
+
+    def step(t, carry):
+        h, out = carry
+        h = a[t][None, :] * h + b[t][None, :]
+        out = jax.lax.dynamic_update_slice_in_dim(out, h, t, axis=0)
+        return h, out
+
+    h0 = h_ref[...]
+    out0 = jnp.zeros((block_s, a.shape[1]), jnp.float32)
+    h, out = jax.lax.fori_loop(0, block_s, step, (h0, out0))
+    h_ref[...] = h
+    out_ref[0] = out
+
+
+def rglru_scan_fwd(
+    a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray,
+    block_d: int, block_s: int, interpret: bool,
+) -> jnp.ndarray:
+    B, S, D = a.shape
+    grid = (B, D // block_d, S // block_s)
+    kernel = functools.partial(_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_d), lambda b, d, s: (b, d)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, h0)

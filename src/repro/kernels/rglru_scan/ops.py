@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_fwd
+
+
+def _pick(s: int, target: int) -> int:
+    b = min(target, s)
+    while s % b:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_s", "interpret"))
+def rglru_scan(
+    a: jnp.ndarray,    # (B, S, D) decay gates in (0, 1)
+    bx: jnp.ndarray,   # (B, S, D) gated inputs
+    h0: jnp.ndarray,   # (B, D)
+    block_d: int = 512,
+    block_s: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bd = _pick(a.shape[2], block_d)
+    bs = _pick(a.shape[1], block_s)
+    return rglru_scan_fwd(a, bx, h0, block_d=bd, block_s=bs,
+                          interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the RG-LRU diagonal-recurrence kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = a_t * h_{t-1} + bx_t.  a, bx: (B, S, D); h0: (B, D).
+    Returns the full state sequence (B, S, D) float32."""
+    B, S, D = a.shape
+    h = h0.astype(jnp.float32)
+    out = []
+    a32, b32 = a.astype(jnp.float32), bx.astype(jnp.float32)
+    for t in range(S):
+        h = a32[:, t] * h + b32[:, t]
+        out.append(h)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,11 @@
+"""Pure-JAX model zoo for the 10 assigned architectures."""
+from repro.models.model import (  # noqa: F401
+    count_params,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_params,
+    loss_fn,
+    param_shapes,
+)
+from repro.models.parallel import ParallelContext, single_device_ctx  # noqa: F401

@@ -1,0 +1,315 @@
+"""Attention: GQA with RoPE, chunked (flash-style) softmax, sliding-window
+block-local attention, decode against a KV cache, and cross-attention.
+
+The chunked jnp implementation is the oracle for the Pallas flash kernel
+(kernels/flash_attention) AND the default XLA path for the dry-run: it
+never materializes the full (S x S) score matrix, so the memory-roofline
+term reflects a production attention, not a naive one.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_head_norm
+
+NEG_INF = -1e30
+
+
+# ---------------- params ---------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    hd = cfg.head_dim_
+    dq = cfg.num_heads * hd
+    dkv = cfg.num_kv_heads * hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, dq, dt),
+        "wk": dense_init(ks[1], cfg.d_model, dkv, dt),
+        "wv": dense_init(ks[2], cfg.d_model, dkv, dt),
+        "wo": dense_init(ks[3], dq, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((dq,), dt)
+        p["bk"] = jnp.zeros((dkv,), dt)
+        p["bv"] = jnp.zeros((dkv,), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _project_q(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q)
+    return q  # (B, Hq, S, hd)
+
+
+def _project_kv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    if "k_norm" in p:
+        k = rms_head_norm(p["k_norm"], k)
+    return k, v  # (B, Hkv, S, hd)
+
+
+# ---------------- chunked flash-style softmax ------------------------------
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return max(c, 1)
+
+
+def chunked_attention(
+    q: jnp.ndarray,          # (B, Hq, Sq, hd)
+    k: jnp.ndarray,          # (B, Hkv, Sk, hd)
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,      # (Sq,) int32
+    kv_pos: jnp.ndarray,     # (Sk,) int32
+    causal: bool = True,
+    window: int = 0,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention, never materializing (Sq x Sk)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = hd**-0.5
+    cq = _pick_chunk(Sq, chunk_q)
+    ck = _pick_chunk(k.shape[2], chunk_k)
+    nq, nk = Sq // cq, k.shape[2] // ck
+
+    qg = q.reshape(B, Hkv, G, nq, cq, hd).transpose(3, 0, 1, 2, 4, 5)
+    qp = q_pos.reshape(nq, cq)
+    kc = k.reshape(B, Hkv, nk, ck, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, nk, ck, hd).transpose(2, 0, 1, 3, 4)
+    kp = kv_pos.reshape(nk, ck)
+
+    def per_q_chunk(_, qx):
+        qc, qpc = qx  # (B,Hkv,G,cq,hd), (cq,)
+
+        def per_k_chunk(carry, kx):
+            m, l, acc = carry
+            kcc, vcc, kpc = kx
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qc.astype(jnp.float32),
+                kcc.astype(jnp.float32),
+            ) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpc[None, :] <= qpc[:, None]
+            if window > 0:
+                mask &= (qpc[:, None] - kpc[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vcc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(per_k_chunk, (m0, l0, a0), (kc, vc, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = lax.scan(per_q_chunk, None, (qg, qp))
+    # outs: (nq, B, Hkv, G, cq, hd) -> (B, Hq, Sq, hd)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv * G, Sq, hd)
+    return out.astype(q.dtype)
+
+
+def block_local_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    q_pos: jnp.ndarray, window: int,
+) -> jnp.ndarray:
+    """Sliding-window attention in O(S * 2W): each query block of size W
+    attends to its own and the previous key block (covers any window <= W).
+    """
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    W = min(window, S)
+    S_in = S
+    if S % W:  # pad to a block multiple; padded keys are causally masked
+        pad = W - S % W
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nb = S // W
+    scale = hd**-0.5
+
+    qb = q.reshape(B, Hkv, G, nb, W, hd)
+    kb = k.reshape(B, Hkv, nb, W, hd)
+    vb = v.reshape(B, Hkv, nb, W, hd)
+    # previous block (zeros before block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], axis=2)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([kprev, kb], axis=3)  # (B,Hkv,nb,2W,hd)
+    v2 = jnp.concatenate([vprev, vb], axis=3)
+
+    s = jnp.einsum(
+        "bhgnqd,bhnkd->bhgnqk", qb.astype(jnp.float32), k2.astype(jnp.float32)
+    ) * scale
+    qi = jnp.arange(W)
+    ki = jnp.arange(2 * W) - W  # relative to block start
+    rel = qi[:, None] - ki[None, :]  # distance q - k
+    mask = (rel >= 0) & (rel < W if window >= S else rel < window)
+    # block 0 has no previous block
+    blk0 = jnp.arange(nb) == 0
+    mask_full = mask[None, :, :] & ~(blk0[:, None, None] & (ki < 0)[None, None, :])
+    s = jnp.where(mask_full[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgnqk,bhnkd->bhgnqd", p, v2.astype(jnp.float32))
+    return out.reshape(B, Hq, S, hd)[:, :, :S_in].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,          # (B, Hq, 1, hd)
+    k_cache: jnp.ndarray,    # (B, Hkv, S, hd)
+    v_cache: jnp.ndarray,
+    kv_len: jnp.ndarray,     # (B,) or scalar: #valid cache entries
+    window: int = 0,
+) -> jnp.ndarray:
+    B, Hq, _, hd = q.shape
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    S = k_cache.shape[2]
+    scale = hd**-0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    idx = jnp.arange(S)
+    valid = idx[None, :] < jnp.reshape(kv_len, (-1, 1))
+    if window > 0:
+        valid &= idx[None, :] >= (jnp.reshape(kv_len, (-1, 1)) - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, hd).astype(q.dtype)
+
+
+# ---------------- module-level apply ---------------------------------------
+
+
+def attention_block(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,          # (S,)
+    window: int = 0,
+    use_rope: bool = True,
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    """Self-attention over a full sequence (train / prefill).
+
+    With return_kv=True also returns the (roped) K/V actually used — the
+    exact tensors a decode cache must contain (trailing `window` slice for
+    local attention).
+    """
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if causal and window > 0 and x.shape[1] > window:
+        o = block_local_attention(q, k, v, positions, window)
+    else:
+        o = chunked_attention(q, k, v, positions, positions, causal=causal,
+                              window=window if window > 0 else 0)
+    B, S, _ = x.shape
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    y = o @ p["wo"].astype(x.dtype)
+    if return_kv:
+        if window > 0 and S >= window:
+            # trailing window, rolled so slot(t) == t % window matches the
+            # ring-buffer writes of attention_block_decode
+            k, v = k[:, :, -window:], v[:, :, -window:]
+            k = jnp.roll(k, S % window, axis=2)
+            v = jnp.roll(v, S % window, axis=2)
+        return y, k, v
+    return y
+
+
+def attention_block_decode(
+    p: Dict,
+    x: jnp.ndarray,                   # (B, 1, D)
+    cfg: ModelConfig,
+    pos: jnp.ndarray,                 # (B,) current position
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    window: int = 0,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step: write new KV at `pos`, attend over the cache."""
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    S = k_cache.shape[2]
+    if window > 0 and S == window:
+        # rolling window cache: write at pos % window
+        slot = pos % window
+    else:
+        slot = jnp.minimum(pos, S - 1)
+    bidx = jnp.arange(x.shape[0])
+    k_cache = k_cache.at[bidx, :, slot].set(k[:, :, 0])
+    v_cache = v_cache.at[bidx, :, slot].set(v[:, :, 0])
+    kv_len = jnp.minimum(pos + 1, S)
+    o = decode_attention(q, k_cache, v_cache, kv_len,
+                         window=0 if (window > 0 and S == window) else window)
+    o = o.reshape(x.shape[0], 1, -1)
+    return o @ p["wo"].astype(x.dtype), k_cache, v_cache
+
+
+def cross_attention_block(
+    p: Dict,
+    x: jnp.ndarray,                   # (B, S, D)
+    cfg: ModelConfig,
+    cross_k: jnp.ndarray,             # (B, Hkv, Sx, hd) precomputed
+    cross_v: jnp.ndarray,
+) -> jnp.ndarray:
+    q = _project_q(p, x, cfg)
+    B, S, _ = x.shape
+    Sx = cross_k.shape[2]
+    qpos = jnp.arange(S, dtype=jnp.int32)
+    kpos = jnp.arange(Sx, dtype=jnp.int32)
+    o = chunked_attention(q, cross_k, cross_v, qpos, kpos, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def project_cross_kv(p: Dict, src: jnp.ndarray, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder states / image embeds."""
+    return _project_kv(p, src, cfg)

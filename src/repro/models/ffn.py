@@ -1,0 +1,42 @@
+"""Dense feed-forward blocks: SwiGLU / GeGLU (gated) and plain MLP."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn, dense_init
+
+
+def gated(cfg: ModelConfig) -> bool:
+    return cfg.act in ("silu", "gelu")
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if gated(cfg):
+        return {
+            "w_gate": dense_init(ks[0], cfg.d_model, d_ff, dt),
+            "w_up": dense_init(ks[1], cfg.d_model, d_ff, dt),
+            "w_down": dense_init(ks[2], d_ff, cfg.d_model, dt),
+        }
+    return {
+        "w_in": dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "b_in": jnp.zeros((d_ff,), dt),
+        "w_out": dense_init(ks[1], d_ff, cfg.d_model, dt),
+        "b_out": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def apply_ffn(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    f = act_fn(cfg.act)
+    if "w_gate" in p:
+        g = f(x @ p["w_gate"].astype(x.dtype))
+        u = x @ p["w_up"].astype(x.dtype)
+        return (g * u) @ p["w_down"].astype(x.dtype)
+    h = f(x @ p["w_in"].astype(x.dtype) + p["b_in"].astype(x.dtype))
+    return h @ p["w_out"].astype(x.dtype) + p["b_out"].astype(x.dtype)

@@ -1,0 +1,89 @@
+"""Decode-state management: KV caches, SSM/LRU states, cross-attn caches.
+
+Cache pytrees mirror the stack plan of the model (prefix / scanned blocks
+/ tail) so they can be threaded through `lax.scan` alongside the stacked
+layer params.  `cache_specs` builds ShapeDtypeStruct stand-ins for the
+dry-run (decode cells lower `serve_step` against a standing cache of
+`seq_len`, per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def layer_cache_shape(cfg: ModelConfig, kind: str, B: int, L: int) -> Dict:
+    hd = cfg.head_dim_
+    Hkv = cfg.num_kv_heads
+    cd = jnp.dtype(cfg.compute_dtype)
+    if kind in ("self_attn", "moe", "dense"):
+        return {"k": ((B, Hkv, L, hd), cd), "v": ((B, Hkv, L, hd), cd)}
+    if kind == "local_attn":
+        W = min(cfg.hybrid.local_window, L)
+        return {"k": ((B, Hkv, W, hd), cd), "v": ((B, Hkv, W, hd), cd)}
+    if kind == "decoder":
+        Lx = L  # encoder length == decoder context in our shape cells
+        return {
+            "k": ((B, Hkv, L, hd), cd),
+            "v": ((B, Hkv, L, hd), cd),
+            "ck": ((B, Hkv, Lx, hd), cd),
+            "cv": ((B, Hkv, Lx, hd), cd),
+        }
+    if kind == "cross_attn":
+        n = cfg.num_image_tokens
+        return {"ck": ((B, Hkv, n, hd), cd), "cv": ((B, Hkv, n, hd), cd)}
+    if kind == "ssm":
+        s = cfg.ssm
+        Di = cfg.d_inner_
+        return {
+            "conv": ((B, s.conv_kernel - 1, Di), cd),
+            "ssm": ((B, Di, s.state_dim), jnp.dtype(jnp.float32)),
+        }
+    if kind == "rglru":
+        Dl = cfg.lru_width_
+        return {
+            "conv": ((B, 3, Dl), cd),
+            "lru": ((B, Dl), jnp.dtype(jnp.float32)),
+        }
+    raise ValueError(kind)
+
+
+def _make(entry, builder):
+    return {k: builder(shape, dt) for k, (shape, dt) in entry.items()}
+
+
+def _build_tree(cfg: ModelConfig, B: int, L: int, builder):
+    from repro.models.transformer import stack_plan
+
+    plan = stack_plan(cfg)
+    tree: Dict[str, Any] = {}
+    tree["prefix"] = [
+        _make(layer_cache_shape(cfg, k, B, L), builder) for k in plan.prefix
+    ]
+    if plan.n_scan:
+        blocks = {}
+        for i, kind in enumerate(plan.pattern):
+            entry = layer_cache_shape(cfg, kind, B, L)
+            blocks[str(i)] = {
+                k: builder((plan.n_scan,) + shape, dt)
+                for k, (shape, dt) in entry.items()
+            }
+        tree["blocks"] = blocks
+    tree["tail"] = [
+        _make(layer_cache_shape(cfg, k, B, L), builder) for k in plan.tail
+    ]
+    return tree
+
+
+def init_cache(cfg: ModelConfig, B: int, L: int):
+    """Zero-filled decode state (used by tests / serving)."""
+    return _build_tree(cfg, B, L, lambda s, dt: jnp.zeros(s, dt))
+
+
+def cache_specs(cfg: ModelConfig, B: int, L: int):
+    """ShapeDtypeStruct stand-ins (dry-run, no allocation)."""
+    return _build_tree(cfg, B, L, lambda s, dt: jax.ShapeDtypeStruct(s, dt))

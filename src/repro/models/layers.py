@@ -1,0 +1,133 @@
+"""Primitive layers: inits, norms, rotary embeddings, activations.
+
+Parameters are plain nested dicts of jnp arrays (no flax/optax in this
+environment — the substrate is built from scratch).  Params are stored in
+`cfg.param_dtype` (fp32 master) and cast to `cfg.compute_dtype` at use.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    """Fan-in scaled normal (std = 1/sqrt(d_in))."""
+    return normal_init(key, (d_in, d_out), d_in**-0.5, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    # d^-0.5 keeps tied-head logits O(1) at init
+    return normal_init(key, (vocab, d), d**-0.5, dtype)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------- norms ----------------------------------------------------
+
+
+def init_norm(kind: str, d: int, dtype) -> Dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(kind: str, p: Dict, x: jnp.ndarray, eps: float = 1e-6,
+               upcast: bool = True):
+    """upcast=True materializes the normalized stream in fp32 (safest);
+    upcast=False keeps the reduction in fp32 but the normalize/scale in
+    the compute dtype — halves residual-stream HBM traffic (§Perf C2)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps)
+        if not upcast:
+            return x * inv.astype(dt) * p["scale"].astype(dt)
+        y = x32 * inv
+    else:  # layernorm
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps)
+        if not upcast:
+            y = (x - mu.astype(dt)) * inv.astype(dt) * p["scale"].astype(dt)
+            return y + p["bias"].astype(dt) if "bias" in p else y
+        y = (x32 - mu) * inv
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6):
+    """Per-head QK-norm (Qwen3): normalize over the head_dim axis."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------- rotary ----------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x: (..., seq, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, hd/2)
+    if positions.ndim == 2:  # (B, seq): align with (B, H, seq, hd/2)
+        ang = ang[:, None, :, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------- causal depthwise conv (mamba / griffin) ------------------
+
+
+def init_causal_conv(key, channels: int, kernel: int, dtype) -> Dict:
+    k1, _ = jax.random.split(key)
+    return {
+        "w": normal_init(k1, (channels, kernel), kernel**-0.5, dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def apply_causal_conv(
+    p: Dict, x: jnp.ndarray, state: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  x: (B, S, C).  state: (B, K-1, C) carries
+    the last K-1 inputs for decode.  Returns (y, new_state)."""
+    w = p["w"].astype(x.dtype)  # (C, K)
+    b = p["b"].astype(x.dtype)
+    K = w.shape[1]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    # gather K shifted views; cheap vs conv_general for depthwise-small-K
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[:, i] for i in range(K)
+    )
+    y = y + b
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else state
+    return y, new_state

@@ -1,0 +1,56 @@
+"""Parallel context threaded through model builders.
+
+Carries the mesh + axis names and the Opera scheduling choices
+(bulk-class dispatch for MoE all-to-all, gradient sync flavor).  When
+`mesh` is None the models run as plain single-device jnp (smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Optional[jax.sharding.Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    pod_axis: Optional[str] = None          # set on multi-pod meshes
+    moe_dispatch: str = "rotor"             # rotor | rotor_vlb | xla | local
+    grad_sync: str = "rotor"                # rotor | xla
+    use_pallas: bool = False                # TPU hot-path kernels
+    act_sharding: str = "dp"                # dp | sp (seq over model axis)
+    # layout levers (perf hillclimb, EXPERIMENTS.md §Perf):
+    #   fsdp_tp (default) — params sharded over data (ZeRO) x model (TP)
+    #   dp_only           — model axis repurposed as extra data parallelism
+    #                       (archs whose head counts don't divide tp)
+    #   tp_only           — params resident TP-sharded only (no FSDP
+    #                       gathering; the decode/serving layout)
+    layout: str = "fsdp_tp"
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.layout == "dp_only":
+            return 1
+        return int(self.mesh.shape[self.tp_axis])
+
+    @property
+    def fsdp_params(self) -> bool:
+        return self.layout != "tp_only"
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.dp_axes) + (self.tp_axis,)
+
+
+def single_device_ctx(**kw) -> ParallelContext:
+    return ParallelContext(mesh=None, **kw)

@@ -1,0 +1,100 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv + RG-LRU, gated.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t)                       (recurrence gate)
+    i_t = sigmoid(W_x x_t)                       (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)       (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal recurrence is solved with an associative scan (train /
+prefill) or a single step (decode).  The full recurrent block is:
+    y = W_out( gelu(W_y x) * RG-LRU(conv1d(W_x' x)) )
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_causal_conv, dense_init, init_causal_conv
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    Dl = cfg.lru_width_
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a^c in [0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(ks[5], (Dl,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))  # softplus^-1
+    return {
+        "w_y": dense_init(ks[0], D, Dl, dt),
+        "w_x": dense_init(ks[1], D, Dl, dt),
+        "conv": init_causal_conv(ks[2], Dl, 4, dt),
+        "w_a": dense_init(ks[3], Dl, Dl, dt),
+        "w_i": dense_init(ks[4], Dl, Dl, dt),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[0], Dl, D, dt),
+    }
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid((x @ p["w_a"].astype(x.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"].astype(x.dtype)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * x.astype(jnp.float32))
+
+
+def rglru_scan(p: Dict, x: jnp.ndarray, h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, Dl); h0: (B, Dl).  Returns (h_seq, h_last)."""
+    a, bx = _gates(p, x)
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, hs = lax.associative_scan(combine, (a, bx), axis=1)
+    return hs, hs[:, -1]
+
+
+def rglru_block_mix(
+    p: Dict, u: jnp.ndarray, cfg: ModelConfig, return_state: bool = False
+):
+    """Full-sequence recurrent block (train / prefill)."""
+    B, S, D = u.shape
+    Dl = cfg.lru_width_
+    y_branch = jax.nn.gelu(u @ p["w_y"].astype(u.dtype))
+    x_pre = u @ p["w_x"].astype(u.dtype)
+    x, _ = apply_causal_conv(p["conv"], x_pre)
+    h0 = jnp.zeros((B, Dl), jnp.float32)
+    hs, h_last = rglru_scan(p, x, h0)
+    out = hs.astype(u.dtype) * y_branch
+    out = out @ p["w_out"].astype(u.dtype)
+    if return_state:
+        return out, x_pre[:, -3:, :], h_last
+    return out
+
+
+def rglru_block_decode(
+    p: Dict,
+    u: jnp.ndarray,            # (B, 1, D)
+    cfg: ModelConfig,
+    conv_state: jnp.ndarray,   # (B, K-1, Dl)
+    lru_state: jnp.ndarray,    # (B, Dl)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    y_branch = jax.nn.gelu(u @ p["w_y"].astype(u.dtype))
+    x = u @ p["w_x"].astype(u.dtype)
+    x, conv_state = apply_causal_conv(p["conv"], x, conv_state)
+    a, bx = _gates(p, x)
+    h = a[:, 0] * lru_state + bx[:, 0]
+    out = h[:, None].astype(u.dtype) * y_branch
+    return out @ p["w_out"].astype(u.dtype), conv_state, h

@@ -1,0 +1,189 @@
+"""Parameter / activation / cache PartitionSpec rules.
+
+FSDP(+TP) layout: every weight matrix is sharded along `model` (TP) on
+its "parallel" dimension and along the data axes on the other (ZeRO-3
+analog).  Rules are name+shape based with divisibility fallbacks (a dim
+that doesn't divide the axis size stays replicated on that axis), so the
+same rule-tree serves all 10 architectures, meshes of any size, and both
+the fp32 master params and the optimizer moments.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.parallel import ParallelContext
+
+# rule: param-name -> (spec for the trailing ndim dims, rightmost aligned)
+# "tp" = model axis, "dp" = fsdp over data axes, None = replicated
+_MATRIX_RULES: Dict[str, Tuple[str, ...]] = {
+    # embeddings / head: vocab on tp (column-parallel head, row-gathered embed)
+    "embed": ("tp", "dp"),
+    "lm_head": ("dp", "tp"),
+    # attention
+    "wq": ("dp", "tp"),
+    "wk": ("dp", "tp"),
+    "wv": ("dp", "tp"),
+    "wo": ("tp", "dp"),
+    # dense ffn
+    "w_gate": ("dp", "tp"),
+    "w_up": ("dp", "tp"),
+    "w_down": ("tp", "dp"),
+    "w_in": ("dp", "tp"),
+    "w_out": ("tp", "dp"),
+    # moe experts (leading expert dim handled specially: experts on tp)
+    "router": ("dp", None),
+    "shared_gate": ("dp", "tp"),
+    "shared_up": ("dp", "tp"),
+    "shared_down": ("tp", "dp"),
+    # mamba
+    "in_proj": ("dp", "tp"),
+    "x_proj": ("tp", None),
+    "dt_proj": (None, "tp"),
+    "out_proj": ("tp", "dp"),
+    "A_log": ("tp", None),
+    # rg-lru
+    "w_y": ("dp", "tp"),
+    "w_x": ("dp", "tp"),
+    "w_a": ("tp", None),
+    "w_i": ("tp", None),
+    "w_out_rec": ("tp", "dp"),
+}
+
+_EXPERT_LEAVES = ("w_gate", "w_up", "w_down")
+
+
+def _axis_ok(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def param_spec(
+    path: Tuple[Any, ...],
+    shape: Tuple[int, ...],
+    cfg: ModelConfig,
+    pctx: ParallelContext,
+) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    tp, tp_n = pctx.tp_axis, pctx.tp_size
+    dp = tuple(pctx.dp_axes)
+    dp_n = pctx.dp_size if pctx.fsdp_params else 1
+    in_moe = "moe" in keys
+    ndim = len(shape)
+
+    def resolve(kindseq, dims):
+        out = []
+        for kind, d in zip(kindseq, dims):
+            if kind == "tp" and _axis_ok(d, tp_n):
+                out.append(tp)
+            elif kind == "dp" and _axis_ok(d, dp_n):
+                out.append(dp)
+            else:
+                out.append(None)
+        return out
+
+    if in_moe and name in _EXPERT_LEAVES:
+        # stacked experts: (..., E, D, F) -> experts over tp, F/D over dp
+        lead = [None] * (ndim - 3)
+        e_dim = shape[-3]
+        spec = lead + resolve(
+            ("tp", "dp", None), (e_dim, shape[-2], shape[-1])
+        )
+        return P(*spec)
+
+    # rg-lru final projection shares the "w_out" name with plain mlps;
+    # disambiguate by parent
+    rule_name = name
+    if name == "w_out" and "rec" in keys:
+        rule_name = "w_out_rec"
+
+    rule = _MATRIX_RULES.get(rule_name)
+    if rule is None or ndim < 2:
+        # biases / norms / scalars: shard the last dim over tp if large
+        if ndim == 1 and _axis_ok(shape[0], tp_n) and shape[0] >= 4096:
+            return P(*([None] * (ndim - 1) + [tp]))
+        return P(*([None] * ndim))
+    lead = [None] * (ndim - 2)
+    spec = lead + resolve(rule, shape[-2:])
+    # avoid double-booking an axis (can't appear twice in one spec)
+    return P(*spec)
+
+
+def param_shardings(shapes, cfg: ModelConfig, pctx: ParallelContext):
+    mesh = pctx.mesh
+
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf.shape, cfg, pctx))
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+# ---------------- batch / cache shardings ----------------------------------
+
+
+def batch_spec(name: str, shape: Tuple[int, ...], pctx: ParallelContext) -> P:
+    dp = tuple(pctx.dp_axes)
+    B = shape[0]
+    if not _axis_ok(B, pctx.dp_size):
+        return P(*([None] * len(shape)))
+    return P(dp, *([None] * (len(shape) - 1)))
+
+
+def batch_shardings(specs: Dict[str, Any], pctx: ParallelContext):
+    mesh = pctx.mesh
+    return {
+        k: jax.ShapeDtypeStruct(
+            v.shape,
+            v.dtype,
+            sharding=NamedSharding(mesh, batch_spec(k, v.shape, pctx)),
+        )
+        for k, v in specs.items()
+    }
+
+
+def cache_spec(path, shape: Tuple[int, ...], pctx: ParallelContext) -> P:
+    """KV caches: batch over dp, sequence (axis -2 for k/v, len>=1024) over
+    tp — flash-decoding style sequence parallelism for the 32k caches."""
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    dp = tuple(pctx.dp_axes)
+    spec: list = [None] * len(shape)
+    # caches are (B, ...) per layer or (n_scan, B, ...) when stacked;
+    # locate the batch dim from the base rank of each state kind
+    base_rank = {"k": 4, "v": 4, "ck": 4, "cv": 4, "conv": 3, "ssm": 3, "lru": 2}
+    bdim = len(shape) - base_rank.get(name, len(shape))
+    if 0 <= bdim < len(shape) and _axis_ok(shape[bdim], pctx.dp_size):
+        spec[bdim] = dp
+    if name in ("k", "v", "ck", "cv"):
+        sdim = len(shape) - 2
+        if _axis_ok(shape[sdim], pctx.tp_size) and shape[sdim] >= 1024:
+            spec[sdim] = pctx.tp_axis
+        elif _axis_ok(shape[len(shape) - 3], pctx.tp_size):
+            spec[len(shape) - 3] = pctx.tp_axis  # kv heads over tp
+    elif name in ("conv", "ssm"):
+        # channel dim over tp
+        cdim = len(shape) - 1 if name == "conv" else len(shape) - 2
+        if _axis_ok(shape[cdim], pctx.tp_size):
+            spec[cdim] = pctx.tp_axis
+    elif name == "lru":
+        if _axis_ok(shape[-1], pctx.tp_size):
+            spec[-1] = pctx.tp_axis
+    return P(*spec)
+
+
+def cache_shardings(cache_tree, pctx: ParallelContext):
+    mesh = pctx.mesh
+
+    def one(path, leaf):
+        return jax.ShapeDtypeStruct(
+            leaf.shape,
+            leaf.dtype,
+            sharding=NamedSharding(mesh, cache_spec(path, leaf.shape, pctx)),
+        )
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,142 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b).
+
+Train/prefill uses a *chunked* selective scan: the sequence is processed
+in chunks of `chunk` steps; within a chunk the diagonal recurrence is
+solved with an associative scan, and a single (B, d_inner, N) state is
+carried between chunks.  This keeps the materialized discretized tensors
+to (B, chunk, d_inner, N) — the same blocking the Pallas kernel
+(kernels/mamba_scan) uses on TPU VMEM — instead of the naive
+(B, S, d_inner, N) which is petabytes at the 500k design points.
+
+Decode carries (conv_state, ssm_state) and is O(1) in context length.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_causal_conv, dense_init, init_causal_conv
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    D, Di, N, R = cfg.d_model, cfg.d_inner_, s.state_dim, cfg.dt_rank_
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # S4D-real init for A
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (Di, 1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[5], (Di,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))
+    )))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * Di, dt),
+        "conv": init_causal_conv(ks[1], Di, s.conv_kernel, dt),
+        "x_proj": dense_init(ks[2], Di, R + 2 * N, dt),
+        "dt_proj": dense_init(ks[3], R, Di, dt),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[4], Di, D, dt),
+    }
+
+
+def _ssm_params(p, x, cfg: ModelConfig):
+    """dt (B,T,Di), Bmat (B,T,N), Cmat (B,T,N) from the conv output x."""
+    s = cfg.ssm
+    R, N = cfg.dt_rank_, s.state_dim
+    dbc = x @ p["x_proj"].astype(x.dtype)
+    dt_r, Bm, Cm = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = dt_r @ p["dt_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _scan_chunk(h0, dA, dBx, Cm):
+    """Associative scan of h_t = dA_t * h_{t-1} + dBx_t within a chunk.
+
+    h0: (B, Di, N); dA, dBx: (B, T, Di, N); Cm: (B, T, N).
+    Returns (y (B,T,Di), h_T).
+    """
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    # fold the carried state into the first step
+    dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+    aA, hs = lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("btdn,btn->btd", hs, Cm)
+    return y, hs[:, -1]
+
+
+def mamba_mix(
+    p: Dict, u: jnp.ndarray, cfg: ModelConfig, chunk: int = 256,
+    return_state: bool = False,
+):
+    """Full-sequence mixer (train / prefill).  u: (B, S, D).
+
+    With return_state=True also returns (conv_state, ssm_state) for decode
+    continuation.
+    """
+    s = cfg.ssm
+    Di, N = cfg.d_inner_, s.state_dim
+    B, S, D = u.shape
+    xz = u @ p["in_proj"].astype(u.dtype)
+    x_pre, z = jnp.split(xz, 2, axis=-1)
+    x, _ = apply_causal_conv(p["conv"], x_pre)
+    x = jax.nn.silu(x)
+
+    A = -jnp.exp(p["A_log"])  # (Di, N)
+    T = min(chunk, S)
+    while S % T:
+        T -= 1
+    nchunks = S // T
+
+    xc = x.reshape(B, nchunks, T, Di).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+
+    def per_chunk(h, xcp):
+        dt, Bm, Cm = _ssm_params(p, xcp, cfg)           # (B,T,Di),(B,T,N)
+        dA = jnp.exp(dt[..., None] * A)                 # (B,T,Di,N)
+        dBx = (dt * xcp.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+        y, h_new = _scan_chunk(h, dA, dBx, Cm)
+        return h_new, y
+
+    h_last, ys = lax.scan(per_chunk, h0, xc)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, Di)
+    y = y + x.astype(jnp.float32) * p["D"]
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(u.dtype)
+    if return_state:
+        K = s.conv_kernel
+        conv_state = x_pre[:, -(K - 1):, :]
+        return out, conv_state, h_last
+    return out
+
+
+def mamba_decode(
+    p: Dict,
+    u: jnp.ndarray,            # (B, 1, D)
+    cfg: ModelConfig,
+    conv_state: jnp.ndarray,   # (B, K-1, Di)
+    ssm_state: jnp.ndarray,    # (B, Di, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token step; O(1) in context length."""
+    xz = u @ p["in_proj"].astype(u.dtype)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = apply_causal_conv(p["conv"], x, conv_state)
+    x = jax.nn.silu(x)
+    dt, Bm, Cm = _ssm_params(p, x, cfg)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                       # (B,Di,N)
+    dBx = (dt[:, 0] * x[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = dA * ssm_state + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + x[:, 0].astype(jnp.float32) * p["D"]
+    y = (y[:, None].astype(u.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(u.dtype), conv_state, h

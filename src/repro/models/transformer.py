@@ -1,0 +1,372 @@
+"""Heterogeneous transformer stacks with scan-over-layers.
+
+`stack_plan(cfg)` splits the layer-kind sequence into
+    prefix (unrolled) + pattern x n_scan (lax.scan superblocks) + tail,
+so every assigned architecture — uniform dense/MoE/SSM stacks, Griffin's
+(rglru, rglru, local_attn) period-3 pattern, Llama-3.2-V's every-5th
+cross-attention layer, and the Seamless enc-dec — compiles to a compact
+HLO regardless of depth (critical for 80-100 layer dry-runs).
+
+Three modes per layer: "train"/"prefill" (full sequence, prefill also
+emits the decode state) and "decode" (one token against the state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.layers import apply_norm, init_norm
+from repro.models.parallel import ParallelContext
+
+
+# --------------------------------------------------------------------------
+# stack plan
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    prefix: Tuple[str, ...]
+    pattern: Tuple[str, ...]
+    n_scan: int
+    tail: Tuple[str, ...]
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return self.prefix + self.pattern * self.n_scan + self.tail
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    kinds = cfg.layer_kinds()
+    if cfg.family == "encdec":
+        return StackPlan((), ("decoder",), cfg.num_layers, ())
+    if cfg.family == "moe" and cfg.moe.first_dense_layers:
+        r = cfg.moe.first_dense_layers
+        return StackPlan(tuple(kinds[:r]), ("moe",), cfg.num_layers - r, ())
+    if cfg.family == "hybrid":
+        p = cfg.hybrid.pattern
+        n = cfg.num_layers // len(p)
+        rem = cfg.num_layers % len(p)
+        return StackPlan((), tuple(p), n, tuple(kinds[len(p) * n :]))
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        pe = cfg.cross_attn_every
+        assert cfg.num_layers % pe == 0
+        pat = tuple(
+            "cross_attn" if i == pe - 1 else "self_attn" for i in range(pe)
+        )
+        return StackPlan((), pat, cfg.num_layers // pe, ())
+    # uniform
+    return StackPlan((), (kinds[0],), cfg.num_layers, ())
+
+
+def encoder_plan(cfg: ModelConfig) -> StackPlan:
+    return StackPlan((), ("encoder",), cfg.encoder_layers, ())
+
+
+# --------------------------------------------------------------------------
+# per-layer init
+# --------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> Dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    n = lambda: init_norm(cfg.norm, cfg.d_model, dt)  # noqa: E731
+    if kind == "ssm":
+        return {"ln1": n(), "mixer": S.init_mamba(ks[0], cfg)}
+    if kind == "rglru":
+        return {
+            "ln1": n(),
+            "rec": R.init_rglru_block(ks[0], cfg),
+            "ln2": n(),
+            "ffn": F.init_ffn(ks[1], cfg),
+        }
+    if kind == "local_attn":
+        return {
+            "ln1": n(),
+            "attn": A.init_attention(ks[0], cfg),
+            "ln2": n(),
+            "ffn": F.init_ffn(ks[1], cfg),
+        }
+    if kind == "cross_attn":
+        return {
+            "ln1": n(),
+            "attn": A.init_attention(ks[0], cfg, cross=True),
+            "ln2": n(),
+            "ffn": F.init_ffn(ks[1], cfg),
+        }
+    if kind == "decoder":
+        return {
+            "ln1": n(),
+            "attn": A.init_attention(ks[0], cfg),
+            "ln_x": n(),
+            "xattn": A.init_attention(ks[1], cfg, cross=True),
+            "ln2": n(),
+            "ffn": F.init_ffn(ks[2], cfg),
+        }
+    if kind == "encoder":
+        return {
+            "ln1": n(),
+            "attn": A.init_attention(ks[0], cfg),
+            "ln2": n(),
+            "ffn": F.init_ffn(ks[1], cfg),
+        }
+    if kind == "moe":
+        return {
+            "ln1": n(),
+            "attn": A.init_attention(ks[0], cfg),
+            "ln2": n(),
+            "moe": M.init_moe(ks[1], cfg),
+        }
+    if kind == "dense":
+        d_ff = cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense) else cfg.d_ff
+        return {
+            "ln1": n(),
+            "attn": A.init_attention(ks[0], cfg),
+            "ln2": n(),
+            "ffn": F.init_ffn(ks[1], cfg, d_ff=d_ff),
+        }
+    # self_attn
+    return {
+        "ln1": n(),
+        "attn": A.init_attention(ks[0], cfg),
+        "ln2": n(),
+        "ffn": F.init_ffn(ks[1], cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# per-layer apply
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerCtx:
+    positions: Optional[jnp.ndarray] = None   # (S,) train/prefill
+    pos: Optional[jnp.ndarray] = None          # (B,) decode position
+    cross_src: Optional[jnp.ndarray] = None    # (B, Sx, D) enc/image embeds
+    mode: str = "train"                        # train | prefill | decode
+
+
+def _constrain(x, cfg, pctx: ParallelContext):
+    if pctx.mesh is None:
+        return x
+    if pctx.act_sharding == "sp" and x.ndim == 3 and x.shape[1] % pctx.tp_size == 0:
+        spec = P(tuple(pctx.dp_axes), pctx.tp_axis, None)
+    else:
+        spec = P(tuple(pctx.dp_axes), *([None] * (x.ndim - 1)))
+    return lax.with_sharding_constraint(x, jax.NamedSharding(pctx.mesh, spec))
+
+
+def apply_layer(
+    kind: str,
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    pctx: ParallelContext,
+    ctx: LayerCtx,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    mode = ctx.mode
+    window = 0
+    if kind == "local_attn":
+        window = cfg.hybrid.local_window
+
+    def norm(name, h):
+        return apply_norm(cfg.norm, p[name], h, upcast=cfg.norm_upcast)
+
+    new_cache: Optional[Dict] = None
+
+    # ---- mixer sublayer --------------------------------------------------
+    h = norm("ln1", x)
+    if kind == "ssm":
+        if mode == "decode":
+            y, cs, ss = S.mamba_decode(p["mixer"], h, cfg, cache["conv"], cache["ssm"])
+            new_cache = {"conv": cs, "ssm": ss}
+        elif mode == "prefill":
+            y, cs, ss = S.mamba_mix(p["mixer"], h, cfg, return_state=True)
+            new_cache = {"conv": cs, "ssm": ss}
+        else:
+            y = S.mamba_mix(p["mixer"], h, cfg)
+        return _constrain(x + y, cfg, pctx), aux, new_cache
+
+    if kind == "rglru":
+        if mode == "decode":
+            y, cs, hs = R.rglru_block_decode(p["rec"], h, cfg, cache["conv"], cache["lru"])
+            new_cache = {"conv": cs, "lru": hs}
+        elif mode == "prefill":
+            y, cs, hs = R.rglru_block_mix(p["rec"], h, cfg, return_state=True)
+            new_cache = {"conv": cs, "lru": hs}
+        else:
+            y = R.rglru_block_mix(p["rec"], h, cfg)
+        x = x + y
+    elif kind == "cross_attn":
+        if mode == "decode":
+            ck, cv = cache["ck"], cache["cv"]
+            new_cache = {"ck": ck, "cv": cv}
+        else:
+            ck, cv = A.project_cross_kv(p["attn"], ctx.cross_src, cfg)
+            if mode == "prefill":
+                new_cache = {"ck": ck, "cv": cv}
+        y = A.cross_attention_block(p["attn"], h, cfg, ck, cv)
+        x = x + y
+    elif kind == "decoder":
+        if mode == "decode":
+            y, nk, nv = A.attention_block_decode(
+                p["attn"], h, cfg, ctx.pos, cache["k"], cache["v"]
+            )
+            new_cache = {"k": nk, "v": nv, "ck": cache["ck"], "cv": cache["cv"]}
+        elif mode == "prefill":
+            y, kc, vc = A.attention_block(
+                p["attn"], h, cfg, ctx.positions, return_kv=True
+            )
+            new_cache = {"k": kc, "v": vc}
+        else:
+            y = A.attention_block(p["attn"], h, cfg, ctx.positions)
+        x = x + y
+        h = norm("ln_x", x)
+        if mode == "decode":
+            ck, cv = cache["ck"], cache["cv"]
+        else:
+            ck, cv = A.project_cross_kv(p["xattn"], ctx.cross_src, cfg)
+            if mode == "prefill":
+                new_cache.update({"ck": ck, "cv": cv})
+        y = A.cross_attention_block(p["xattn"], h, cfg, ck, cv)
+        x = x + y
+    else:  # self_attn / moe / dense / encoder / local_attn
+        if mode == "decode":
+            y, nk, nv = A.attention_block_decode(
+                p["attn"], h, cfg, ctx.pos, cache["k"], cache["v"], window=window
+            )
+            new_cache = {"k": nk, "v": nv}
+        else:
+            causal = kind != "encoder"
+            if mode == "prefill" and kind != "encoder":
+                y, kc, vc = A.attention_block(
+                    p["attn"], h, cfg, ctx.positions, window=window,
+                    causal=causal, return_kv=True,
+                )
+                new_cache = {"k": kc, "v": vc}
+            else:
+                y = A.attention_block(
+                    p["attn"], h, cfg, ctx.positions, window=window, causal=causal
+                )
+        x = x + y
+
+    x = _constrain(x, cfg, pctx)
+
+    # ---- FFN sublayer ------------------------------------------------------
+    if kind == "moe":
+        h = norm("ln2", x)
+        y, aux = M.apply_moe(p["moe"], h, cfg, pctx)
+        x = x + y
+    elif kind != "ssm":
+        h = norm("ln2", x)
+        y = F.apply_ffn(p["ffn"], h, cfg)
+        x = x + y
+    return _constrain(x, cfg, pctx), aux, new_cache
+
+
+# --------------------------------------------------------------------------
+# stack init / apply
+# --------------------------------------------------------------------------
+
+
+def init_stack(key, cfg: ModelConfig, plan: StackPlan) -> Dict:
+    ks = jax.random.split(key, 3)
+    out: Dict[str, Any] = {}
+    if plan.prefix:
+        keys = jax.random.split(ks[0], len(plan.prefix))
+        out["prefix"] = [
+            init_layer(keys[i], cfg, k) for i, k in enumerate(plan.prefix)
+        ]
+    if plan.n_scan:
+        blocks = {}
+        pkeys = jax.random.split(ks[1], len(plan.pattern))
+        for i, kind in enumerate(plan.pattern):
+            lkeys = jax.random.split(pkeys[i], plan.n_scan)
+            blocks[str(i)] = jax.vmap(
+                lambda kk, kind=kind: init_layer(kk, cfg, kind)
+            )(lkeys)
+        out["blocks"] = blocks
+    if plan.tail:
+        keys = jax.random.split(ks[2], len(plan.tail))
+        out["tail"] = [
+            init_layer(keys[i], cfg, k) for i, k in enumerate(plan.tail)
+        ]
+    return out
+
+
+def apply_stack(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    pctx: ParallelContext,
+    ctx: LayerCtx,
+    plan: StackPlan,
+    caches: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Run prefix -> scanned superblocks -> tail.
+
+    Returns (x, total_aux, new_caches); new_caches is None in train mode.
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    want_cache = ctx.mode in ("prefill", "decode")
+    new_caches: Dict[str, Any] = {"prefix": [], "tail": []} if want_cache else None
+
+    for i, kind in enumerate(plan.prefix):
+        c = caches["prefix"][i] if caches else None
+        x, aux, nc = apply_layer(kind, params["prefix"][i], x, cfg, pctx, ctx, c)
+        aux_total = aux_total + aux
+        if want_cache:
+            new_caches["prefix"].append(nc)
+
+    if plan.n_scan:
+        pat = plan.pattern
+
+        def block_body(carry, xs):
+            h, aux_acc = carry
+            bp = xs[0]
+            bc = xs[1] if len(xs) > 1 else None
+            ncs = {}
+            for i, kind in enumerate(pat):
+                c = bc[str(i)] if bc is not None else None
+                h, aux, nc = apply_layer(kind, bp[str(i)], h, cfg, pctx, ctx, c)
+                aux_acc = aux_acc + aux
+                if nc is not None:
+                    ncs[str(i)] = nc
+            return (h, aux_acc), (ncs if ncs else 0)
+
+        body = block_body
+        if ctx.mode == "train" and cfg.remat == "full":
+            body = jax.checkpoint(
+                block_body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        xs = (params["blocks"],)
+        if caches is not None:
+            xs = (params["blocks"], caches["blocks"])
+        (x, aux_total), ys = lax.scan(body, (x, aux_total), xs)
+        if want_cache:
+            new_caches["blocks"] = ys
+
+    for i, kind in enumerate(plan.tail):
+        c = caches["tail"][i] if caches else None
+        x, aux, nc = apply_layer(kind, params["tail"][i], x, cfg, pctx, ctx, c)
+        aux_total = aux_total + aux
+        if want_cache:
+            new_caches["tail"].append(nc)
+
+    return x, aux_total, new_caches

@@ -1,0 +1,170 @@
+"""Poisson flow-level simulator with processor sharing (Figs. 7, 9, 10).
+
+Flows arrive Poisson at a target load (fraction of aggregate host-link
+capacity), draw sizes from a published distribution, and are served by
+per-class capacity pools:
+
+  Opera:   <15 MB -> latency pool (immediate, multi-hop, taxed);
+           >=15 MB -> bulk pool (direct circuits, tax-free) after a
+           uniform wait for the right slice (<= one cycle).
+  static:  a single pool (expander: taxed multi-hop; Clos: direct but
+           core-capacity-bound).  Priority queuing for short flows is
+           modeled by serving the latency class first from the shared pool.
+
+This is the level of abstraction at which the paper's saturation loads
+and FCT-vs-load trends are determined; packet/transport micro-behavior
+is folded into the calibrated pool capacities (netsim/capacity.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.netsim import capacity as C
+from repro.netsim.workloads import mean_flow_size, sample_flow_sizes
+
+BULK_CUTOFF = 15e6
+
+
+@dataclasses.dataclass
+class FlowSimResult:
+    load: float
+    fct_p99_ms_small: float      # flows < 100 KB
+    fct_p99_ms_mid: float        # 100 KB .. 15 MB
+    fct_p99_ms_large: float      # >= 15 MB
+    fct_mean_ms: float
+    admitted: bool               # backlog stable at this load?
+    finished_frac: float
+    backlog_frac: float = 0.0    # unserved fraction at end of arrivals
+
+
+def simulate(
+    network: str,                 # opera | expander | clos | rotornet
+    workload: str,                # datamining | websearch | hadoop
+    load: float,
+    num_hosts: int = 648,
+    link_gbps: float = 10.0,
+    horizon_s: float = 2.0,
+    dt_s: float = 2e-4,
+    base_rtt_us: float = 20.0,
+    cycle_ms: float = 10.7,
+    seed: int = 0,
+) -> FlowSimResult:
+    rng = np.random.default_rng(seed)
+    agg_bps = num_hosts * link_gbps * 1e9
+    mean_sz = mean_flow_size(workload)
+    lam = load * agg_bps / 8.0 / mean_sz  # flows / s
+
+    n = max(int(lam * horizon_s), 1)
+    arr = np.sort(rng.uniform(0, horizon_s, n))
+    sizes = sample_flow_sizes(workload, n, rng)
+
+    op = C.OPERA_648_PT
+    ex = C.EXPANDER_650_PT
+    if network == "opera":
+        lat_pool = C.latency_capacity(op) * agg_bps / 8.0
+        bulk_pool = C.bulk_capacity_opera(op) * agg_bps / 8.0
+        is_bulk = sizes >= BULK_CUTOFF
+        start_delay = np.where(
+            is_bulk, rng.uniform(0, cycle_ms / 1e3, n), base_rtt_us * 1e-6
+        )
+    elif network == "rotornet":
+        # non-hybrid RotorNet: EVERYTHING waits for direct circuits
+        lat_pool = 0.0
+        bulk_pool = C.bulk_capacity_opera(op) * agg_bps / 8.0
+        is_bulk = np.ones(n, bool)
+        start_delay = rng.uniform(0, cycle_ms / 1e3, n)
+    elif network == "expander":
+        lat_pool = C.latency_capacity(ex) * agg_bps / 8.0
+        bulk_pool = 0.0
+        is_bulk = np.zeros(n, bool)
+        start_delay = np.full(n, base_rtt_us * 1e-6)
+    elif network == "clos":
+        lat_pool = C.clos_capacity(3.0) * agg_bps / 8.0
+        bulk_pool = 0.0
+        is_bulk = np.zeros(n, bool)
+        start_delay = np.full(n, base_rtt_us * 1e-6)
+    else:
+        raise ValueError(network)
+
+    nic_bps = link_gbps * 1e9 / 8.0
+    remaining = sizes.copy()
+    start = arr + start_delay
+    done_t = np.full(n, np.inf)
+    t = 0.0
+    rem_mid = rem_end = None
+    arrived_mid = arrived_end = 0.0
+    steps = int(horizon_s / dt_s) + int(0.5 / dt_s)
+    for step in range(steps):
+        t = step * dt_s
+        active = (start <= t) & (remaining > 0)
+        if rem_mid is None and t >= horizon_s / 2:
+            mask = arr <= t
+            rem_mid = float(remaining[mask].sum())
+            arrived_mid = float(sizes[mask].sum())
+        if rem_end is None and t >= horizon_s:
+            mask = arr <= t
+            rem_end = float(remaining[mask].sum())
+            arrived_end = float(sizes[mask].sum())
+        if not active.any():
+            if t > arr[-1]:
+                break
+            continue
+        for pool_bps, mask in (
+            (lat_pool, active & ~is_bulk),
+            (bulk_pool, active & is_bulk),
+        ):
+            k = int(mask.sum())
+            if k == 0 or pool_bps <= 0:
+                continue
+            share = min(pool_bps / k, nic_bps) * dt_s
+            served = np.minimum(remaining[mask], share)
+            remaining[mask] -= served
+            newly = mask & (remaining <= 0) & np.isinf(done_t)
+            done_t[newly] = t + dt_s
+
+    fct = done_t - arr
+    ok = np.isfinite(fct)
+    finished = float(ok.mean())
+
+    def p99(sel):
+        s = sel & ok
+        if s.sum() < 5:
+            return float("inf") if (sel & ~ok).any() else float("nan")
+        return float(np.percentile(fct[s] * 1e3, 99))
+
+    small = sizes < 100e3
+    mid = (sizes >= 100e3) & (sizes < BULK_CUTOFF)
+    large = sizes >= BULK_CUTOFF
+    # stability: did the backlog grow over the second half of the arrival
+    # window?  stable systems hold backlog ~constant; overloaded ones grow
+    # it by (1 - capacity/load) of the newly offered work.
+    if rem_mid is None or rem_end is None:
+        growth = 0.0
+    else:
+        newly_offered = max(arrived_end - arrived_mid, 1.0)
+        growth = max(rem_end - rem_mid, 0.0) / newly_offered
+    return FlowSimResult(
+        load=load,
+        fct_p99_ms_small=p99(small),
+        fct_p99_ms_mid=p99(mid),
+        fct_p99_ms_large=p99(large),
+        fct_mean_ms=float(np.mean(fct[ok]) * 1e3) if ok.any() else float("inf"),
+        admitted=growth < 0.08,
+        finished_frac=finished,
+        backlog_frac=growth,
+    )
+
+
+def saturation_load(network: str, workload: str, **kw) -> float:
+    """Largest load on a coarse grid that the network still admits."""
+    last = 0.0
+    for load in (0.01, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.35, 0.40, 0.45):
+        r = simulate(network, workload, load, horizon_s=1.0, **kw)
+        if r.admitted:
+            last = load
+        else:
+            break
+    return last

@@ -1,0 +1,238 @@
+"""Slice-stepped fluid simulator for rotor fabrics + static comparisons.
+
+Bulk traffic in Opera/RotorNet is fundamentally fluid at the slice
+timescale: buffers drain over direct circuits (plus RotorLB's two-hop
+relay when capacity is spare and demand is skewed).  This engine steps
+topology slices, moving bytes over live matchings — faithful to §4.2.2
+and sufficient for every bulk-side figure (8, 10, 12) of the paper.
+
+Static networks are served by a max-min fluid share over their fixed
+graphs (expander) or their oversubscription bottleneck (folded Clos).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.opera_paper import OperaNetConfig
+from repro.core.schedule import cycle_timing
+from repro.core.topology import OperaTopology, build_opera_topology
+
+
+@dataclasses.dataclass
+class RotorFluidResult:
+    finished_frac: List[float]          # per slice-step, fraction of bytes done
+    time_us: List[float]
+    fct_99_ms: float
+    fct_mean_ms: float
+    throughput_gbps: float              # aggregate goodput
+    wire_bytes: float                   # total bytes that crossed links
+    goodput_bytes: float                # demand bytes delivered
+    slices_run: int
+
+    @property
+    def bandwidth_tax(self) -> float:
+        return self.wire_bytes / max(self.goodput_bytes, 1.0) - 1.0
+
+
+def simulate_rotor_bulk(
+    cfg: OperaNetConfig,
+    demand: np.ndarray,            # rack->rack bytes (bulk class)
+    vlb: bool = True,
+    max_cycles: int = 400,
+    topo: Optional[OperaTopology] = None,
+    seed: int = 0,
+) -> RotorFluidResult:
+    n = cfg.num_racks
+    topo = topo or build_opera_topology(n, cfg.u, seed=seed, groups=cfg.groups)
+    t = cycle_timing(cfg)
+    slice_s = t.slice_us * 1e-6
+    cap = cfg.link_rate_gbps * 1e9 / 8 * slice_s * t.duty_cycle  # bytes/link/slice
+
+    own = demand.astype(np.float64).copy()
+    relay = np.zeros_like(own)
+    total = own.sum()
+    done = 0.0
+    wire = 0.0
+    finished, times = [], []
+    per_pair_left = own.copy()
+
+    steps = 0
+    for step in range(max_cycles * topo.num_slices):
+        tslice = step % topo.num_slices
+        for _, p in topo.live_matchings(tslice):
+            idx = np.arange(n)
+            mask = p != idx
+            srcs = idx[mask]
+            dsts = p[mask]
+            # 1) direct: own traffic for the connected partner
+            send_own = np.minimum(own[srcs, dsts], cap)
+            own[srcs, dsts] -= send_own
+            # 2) relayed traffic now one hop from its destination
+            room = cap - send_own
+            send_relay = np.minimum(relay[srcs, dsts], room)
+            relay[srcs, dsts] -= send_relay
+            room -= send_relay
+            delivered = send_own + send_relay
+            done += delivered.sum()
+            wire += (send_own + send_relay).sum()
+            per_pair_left[srcs, dsts] = np.maximum(
+                per_pair_left[srcs, dsts] - send_own, 0.0
+            )
+            # 3) RotorLB VLB: spare capacity spreads own queued traffic to
+            #    the partner as a relay (delivered next cycle) — only when
+            #    the partner's relay queue isn't already deep (fairness).
+            if vlb:
+                for k in range(len(srcs)):
+                    r = room[k]
+                    if r <= 0:
+                        continue
+                    s, m = srcs[k], dsts[k]
+                    row = own[s]
+                    # spread from the largest backlogs first
+                    for dd in np.argsort(row)[::-1][:4]:
+                        if row[dd] <= 0 or dd == m or r <= 0:
+                            continue
+                        mv = min(row[dd], r)
+                        own[s, dd] -= mv
+                        relay[m, dd] += mv
+                        wire += mv  # first hop of the 2-hop path (the tax)
+                        r -= mv
+                    room[k] = r
+        steps += 1
+        finished.append(done / max(total, 1.0))
+        times.append((step + 1) * t.slice_us)
+        if done >= total * 0.99999:
+            break
+
+    arr = np.array(finished)
+    tms = np.array(times) / 1e3
+    fct99 = float(tms[np.searchsorted(arr, 0.99)]) if arr[-1] >= 0.99 else float("inf")
+    fct_mean = float(np.interp(0.5, arr, tms))
+    dur_s = times[-1] * 1e-6
+    return RotorFluidResult(
+        finished_frac=finished,
+        time_us=times,
+        fct_99_ms=fct99,
+        fct_mean_ms=fct_mean,
+        throughput_gbps=done * 8 / dur_s / 1e9,
+        wire_bytes=wire,
+        goodput_bytes=done,
+        slices_run=steps,
+    )
+
+
+# ---------------- static comparison networks --------------------------------
+
+
+@dataclasses.dataclass
+class StaticFluidResult:
+    fct_99_ms: float
+    throughput_gbps: float
+    wire_bytes: float
+    goodput_bytes: float
+
+    @property
+    def bandwidth_tax(self) -> float:
+        return self.wire_bytes / max(self.goodput_bytes, 1.0) - 1.0
+
+
+def simulate_expander_bulk(
+    adj: np.ndarray,
+    demand: np.ndarray,
+    link_rate_gbps: float,
+    dt_us: float = 100.0,
+    max_steps: int = 1_000_000,
+) -> StaticFluidResult:
+    """Max-min fluid over a static expander with shortest-path routing.
+
+    Every byte consumes `hops` link-slots (the bandwidth tax); service is
+    a per-source fair share of each link.  We approximate max-min by
+    uniform sharing over the flows crossing each link, iterated per step.
+    """
+    from repro.core.routing import bfs_next_hop
+
+    n = adj.shape[0]
+    dist, nxt = bfs_next_hop(adj)
+    # link loads: route demand along shortest paths, precompute per-pair path
+    paths: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for s in range(n):
+        for d in range(n):
+            if s == d or demand[s, d] <= 0:
+                continue
+            path = []
+            cur = s
+            while cur != d:
+                h = nxt[cur, d]
+                if h < 0:
+                    break
+                path.append((cur, h))
+                cur = h
+            paths[(s, d)] = path
+
+    left = demand.astype(np.float64).copy()
+    cap_per_step = link_rate_gbps * 1e9 / 8 * dt_us * 1e-6
+    total = left.sum()
+    done, wire, steps = 0.0, 0.0, 0
+    done_hist, t_hist = [], []
+    active = {k for k, v in paths.items() if left[k] > 0}
+    while active and steps < max_steps:
+        # count flows per link
+        link_flows: Dict[Tuple[int, int], int] = {}
+        for k in active:
+            for e in paths[k]:
+                link_flows[e] = link_flows.get(e, 0) + 1
+        newly_done = []
+        for k in active:
+            share = min(cap_per_step / link_flows[e] for e in paths[k])
+            mv = min(left[k], share)
+            left[k] -= mv
+            done += mv
+            wire += mv * len(paths[k])
+            if left[k] <= 0:
+                newly_done.append(k)
+        for k in newly_done:
+            active.remove(k)
+        steps += 1
+        done_hist.append(done / max(total, 1.0))
+        t_hist.append(steps * dt_us / 1e3)
+        if done >= total * 0.99999:
+            break
+    arr = np.array(done_hist)
+    fct99 = float(np.array(t_hist)[np.searchsorted(arr, 0.99)]) if arr[-1] >= 0.99 else float("inf")
+    dur_s = steps * dt_us * 1e-6
+    return StaticFluidResult(
+        fct_99_ms=fct99,
+        throughput_gbps=done * 8 / dur_s / 1e9,
+        wire_bytes=wire,
+        goodput_bytes=done,
+    )
+
+
+def simulate_clos_bulk(
+    num_hosts: int,
+    demand: np.ndarray,          # rack-level
+    link_rate_gbps: float,
+    oversubscription: float = 3.0,
+) -> StaticFluidResult:
+    """Folded Clos as its two binding constraints: per-host NIC rate and
+    the core bottleneck (aggregate inter-rack capacity = hosts*rate/M)."""
+    total = demand.sum()
+    core_gbps = num_hosts * link_rate_gbps / oversubscription
+    # per-rack egress also bounded by d*rate
+    num_racks = demand.shape[0]
+    hosts_per_rack = num_hosts // num_racks
+    rack_out = demand.sum(1).max()
+    rack_in = demand.sum(0).max()
+    egress_gbps = hosts_per_rack * link_rate_gbps
+    t_core = total * 8 / (core_gbps * 1e9)
+    t_edge = max(rack_out, rack_in) * 8 / (egress_gbps * 1e9)
+    dur = max(t_core, t_edge, 1e-9)
+    return StaticFluidResult(
+        fct_99_ms=dur * 1e3,
+        throughput_gbps=total * 8 / dur / 1e9,
+        wire_bytes=total,  # direct routing: no tax
+        goodput_bytes=total,
+    )

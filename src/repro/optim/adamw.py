@@ -1,0 +1,94 @@
+"""AdamW with cosine schedule, global-norm clipping, decoupled decay.
+
+Built from scratch (no optax in this environment).  Optimizer state is a
+pytree shaped like the params (same shardings), so FSDP sharding of the
+moments comes for free from the param sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(c: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = c.lr * jnp.minimum(1.0, (step + 1) / max(c.warmup_steps, 1))
+    t = jnp.clip(
+        (step - c.warmup_steps) / max(c.total_steps - c.warmup_steps, 1), 0, 1
+    )
+    cos = c.min_lr_frac + (1 - c.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < c.warmup_steps, warm, c.lr * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(  # noqa: E731
+        lambda x: jnp.zeros(x.shape, jnp.float32), p
+    )
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def _decay_mask(path) -> bool:
+    """No decay for norms / biases / 1-d params."""
+    name = getattr(path[-1], "key", getattr(path[-1], "name", ""))
+    return name not in ("scale", "bias", "b_in", "b_out", "bq", "bk", "bv",
+                        "dt_bias", "lambda", "D")
+
+
+def adamw_update(
+    c: AdamWConfig, params, grads, opt_state
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = opt_state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(c, step)
+    b1, b2 = c.beta1, c.beta2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + c.eps)
+        if _decay_mask(path):
+            delta = delta + c.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, opt_state["m"], opt_state["v"],
+    )
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

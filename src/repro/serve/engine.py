@@ -1,0 +1,149 @@
+"""Continuous-batching serving engine (prefill + decode over slot caches).
+
+A fixed pool of B slots shares one batched decode cache.  New requests
+prefill individually (at their own length bucket) and are inserted into a
+free slot; every engine tick runs one batched decode step for all active
+slots.  This is the standard production decode loop (vLLM-style at the
+granularity JAX expresses naturally), with Opera's traffic classes at the
+collective layer: decode MoE dispatch rides the rotor-direct schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.kvcache import init_cache
+from repro.models.model import forward_decode, forward_prefill
+from repro.models.parallel import ParallelContext
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (L,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1               # -1: never stop early
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        pctx: ParallelContext,
+        slots: int = 4,
+        max_seq: int = 128,
+        greedy: bool = True,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.pctx = pctx
+        self.slots = slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.cache = init_cache(cfg, slots, max_seq)
+        self.pos = np.zeros(slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, q, c: forward_decode(p, t, q, c, cfg, pctx)
+        )
+        self._prefill = jax.jit(
+            lambda p, b: forward_prefill(p, b, cfg, pctx)
+        )
+
+    # ---------------- request plumbing -------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _insert(self, slot: int, req: Request):
+        L = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        if self.cfg.family == "encdec":
+            batch["encoder_embeds"] = jnp.zeros(
+                (1, L, self.cfg.d_model), jnp.dtype(self.cfg.compute_dtype)
+            )
+        if self.cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (1, self.cfg.num_image_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype),
+            )
+        logits, pc = self._prefill(self.params, batch)
+        # write the single-request cache into the batched slot.  prefill
+        # caches have seq length L; pad into the slot's max_seq buffers.
+        base_rank = {"k": 4, "v": 4, "ck": 4, "cv": 4,
+                     "conv": 3, "ssm": 3, "lru": 2}
+
+        def put(path, slot_leaf, pre_leaf):
+            name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+            bdim = slot_leaf.ndim - base_rank.get(name, slot_leaf.ndim)
+            pads = [
+                (0, slot_leaf.shape[ax] - pre_leaf.shape[ax])
+                if ax != bdim else (0, 0)
+                for ax in range(pre_leaf.ndim)
+            ]
+            pre = jnp.pad(pre_leaf, pads)
+            row = jnp.take(pre, 0, axis=bdim)
+            return jax.lax.dynamic_update_index_in_dim(
+                slot_leaf, row.astype(slot_leaf.dtype), slot, axis=bdim
+            )
+
+        self.cache = jax.tree_util.tree_map_with_path(put, self.cache, pc)
+        tok = int(jnp.argmax(logits[0])) if self.greedy else int(
+            jax.random.categorical(jax.random.key(req.rid), logits[0])
+        )
+        req.out_tokens.append(tok)
+        self.active[slot] = req
+        self.pos[slot] = L
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    # ---------------- engine tick -------------------------------------------
+    def step(self) -> int:
+        """Admit queued requests, run one batched decode step.  Returns the
+        number of active requests after the tick."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._insert(slot, self.queue.pop(0))
+
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in live:
+            toks[i, 0] = self.active[i].out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), jnp.asarray(self.pos), self.cache
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in live:
+            r = self.active[i]
+            self.pos[i] += 1
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            if (
+                tok == r.eos_id
+                or len(r.out_tokens) >= r.max_new_tokens
+                or self.pos[i] >= self.max_seq - 1
+            ):
+                r.done = True
+                self.finished.append(r)
+                self.active[i] = None
+        return sum(r is not None for r in self.active)
+
+    def run_to_completion(self, max_ticks: int = 1000) -> List[Request]:
+        for _ in range(max_ticks):
+            self.step()
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return self.finished

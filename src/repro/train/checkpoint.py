@@ -1,0 +1,123 @@
+"""Mesh-agnostic (elastic) checkpointing with async save.
+
+Checkpoints store logical (unsharded) arrays + a JSON manifest (step,
+tree structure, shapes/dtypes), so a run saved on one mesh restores onto
+any other — the elastic-scaling primitive.  Saves run on a background
+thread (the train loop only pays for the host gather); `wait()` joins.
+
+Layout:  <dir>/step_<N>/manifest.json + arrays.npz
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ---------------- save -------------------------------------------------
+    def save(self, step: int, state, extra: Optional[Dict] = None,
+             blocking: bool = False):
+        self.wait()
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        treedef = jax.tree_util.tree_structure(state)
+
+        def _write():
+            d = self.dir / f"step_{step:08d}"
+            tmp = self.dir / f".tmp_step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz", **host)
+            manifest = {
+                "step": int(step),
+                "treedef": str(treedef),
+                "keys": sorted(host.keys()),
+                "extra": extra or {},
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if d.exists():
+                shutil.rmtree(d)
+            tmp.rename(d)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------- restore ----------------------------------------------
+    def steps(self) -> List[int]:
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if (p / "manifest.json").exists()
+        )
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of `like` (values or SDS).  With
+        `shardings` (same tree), arrays are placed sharded — onto ANY
+        mesh, not necessarily the one that saved them (elastic)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        data = np.load(d / "arrays.npz")
+        flat_like = _flatten(like)
+        flat_shard = _flatten(shardings) if shardings is not None else None
+        out = {}
+        for k, leaf in flat_like.items():
+            arr = data[k]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"checkpoint leaf {k}: shape {arr.shape} != {leaf.shape}"
+                )
+            if flat_shard is not None:
+                out[k] = jax.device_put(arr, flat_shard[k])
+            else:
+                out[k] = jax.numpy.asarray(arr, dtype=leaf.dtype)
+        # rebuild the tree in `like`'s structure
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        keys = list(_flatten(like).keys())
+        ordered = [out[k] for k in keys]
+        return jax.tree_util.tree_unflatten(treedef, ordered), step

@@ -1,0 +1,110 @@
+"""Expander diagnostics + per-slice routing + failure handling (§3.6.2, §5.5)."""
+import numpy as np
+import pytest
+
+from repro.core.expander import (
+    hop_distances,
+    mean_max_path,
+    path_length_cdf,
+    ramanujan_bound,
+    random_regular_expander,
+    spectral_gap,
+)
+from repro.core.routing import (
+    FailureSet,
+    bfs_next_hop,
+    compute_routes,
+    connectivity_loss,
+    path_stretch,
+    ruleset_size,
+    slice_adjacency,
+)
+from repro.core.topology import build_opera_topology
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return build_opera_topology(24, 4, seed=1)
+
+
+class TestExpander:
+    def test_random_union_is_good_expander(self):
+        adj = random_regular_expander(32, 5, seed=0)
+        gap = spectral_gap(adj)
+        assert gap > 0.5 * ramanujan_bound(5)
+        mean_h, max_h, disc = mean_max_path(adj)
+        assert disc == 0 and max_h <= 4
+
+    def test_hop_distances_match_bfs_walk(self):
+        adj = random_regular_expander(20, 3, seed=2)
+        dist, nxt = bfs_next_hop(adj)
+        d2 = hop_distances(adj)
+        assert np.array_equal(dist, d2)
+        # walking next_hop reproduces dist
+        for s in range(20):
+            for d in range(20):
+                if s == d or dist[s, d] < 0:
+                    continue
+                cur, hops = s, 0
+                while cur != d and hops <= dist[s, d]:
+                    cur = int(nxt[cur, d])
+                    hops += 1
+                assert cur == d and hops == dist[s, d]
+
+    def test_path_cdf_monotone(self):
+        adj = random_regular_expander(24, 4, seed=3)
+        cdf = path_length_cdf(adj)
+        vals = [cdf[h] for h in sorted(cdf)]
+        assert all(b >= a for a, b in zip(vals, vals[1:]))
+        assert abs(vals[-1] - 1.0) < 1e-9
+
+
+class TestFailures:
+    def test_no_failures_fully_connected(self, topo):
+        loss = connectivity_loss(
+            topo, FailureSet(), slices=range(0, topo.num_slices, 4)
+        )
+        assert loss["worst_slice_disconnected_frac"] == 0.0
+
+    def test_single_link_failure_tolerated(self, topo):
+        loss = connectivity_loss(
+            topo, FailureSet(links={(0, 1), (2, 3)}),
+            slices=range(0, topo.num_slices, 4),
+        )
+        assert loss["worst_slice_disconnected_frac"] == 0.0
+
+    def test_switch_failure_tolerated(self, topo):
+        # u=4: losing 1 of 4 switches leaves a connected expander (§5.5)
+        loss = connectivity_loss(
+            topo, FailureSet(switches={0}), slices=range(0, topo.num_slices, 4)
+        )
+        assert loss["worst_slice_disconnected_frac"] == 0.0
+
+    def test_tor_failure_excludes_failed(self, topo):
+        loss = connectivity_loss(
+            topo, FailureSet(tors={5}), slices=range(0, topo.num_slices, 4)
+        )
+        assert loss["worst_slice_disconnected_frac"] < 0.05
+
+    def test_failures_stretch_paths(self, topo):
+        base = path_stretch(topo, FailureSet(), slices=[0, 5, 10])
+        hurt = path_stretch(
+            topo, FailureSet(switches={0}), slices=[0, 5, 10]
+        )
+        assert hurt["mean_path"] >= base["mean_path"]
+
+    def test_routes_recomputed_around_failure(self, topo):
+        f = FailureSet(links={(0, 1)})
+        routes = compute_routes(topo, f, slices=[0])[0]
+        adj = slice_adjacency(topo, 0, f)
+        # next hop never uses the failed link
+        for s in range(topo.num_racks):
+            for d in range(topo.num_racks):
+                h = routes.next_hop[s, d]
+                if h >= 0:
+                    assert adj[s, h]
+
+
+def test_ruleset_scales_quadratically():
+    a, b = ruleset_size(108), ruleset_size(216)
+    assert 3.5 < b / a < 4.5

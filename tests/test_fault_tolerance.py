@@ -1,0 +1,119 @@
+"""Fleet health: failure detection, straggler policy, restart planning."""
+import pytest
+
+from repro.train.health import FleetMonitor, HealthConfig, RestartPlan
+
+
+def _fleet(n=8):
+    return FleetMonitor([f"w{i}" for i in range(n)],
+                        HealthConfig(timeout_steps=3, straggler_factor=2.0,
+                                     patience=3))
+
+
+class TestDetection:
+    def test_healthy_fleet_no_alarms(self):
+        m = _fleet()
+        for step in range(1, 6):
+            for w in list(m.workers):
+                m.heartbeat(w, step, 1.0)
+            r = m.check(step)
+            assert not r["dead"] and not r["stragglers"]
+
+    def test_dead_worker_detected_after_timeout(self):
+        m = _fleet()
+        for step in range(1, 6):
+            for w in list(m.workers):
+                if w != "w3" or step < 2:
+                    m.heartbeat(w, step, 1.0)
+            r = m.check(step)
+            if step < 4:
+                assert "w3" not in r["dead"]
+        assert "w3" in m.failed
+
+    def test_straggler_needs_patience(self):
+        m = _fleet()
+        flagged_at = None
+        for step in range(1, 10):
+            for w in list(m.workers):
+                m.heartbeat(w, step, 5.0 if w == "w1" else 1.0)
+            r = m.check(step)
+            if "w1" in r["stragglers"]:
+                flagged_at = step
+                break
+        assert flagged_at is not None and flagged_at >= 3
+
+    def test_transient_slowness_forgiven(self):
+        m = _fleet()
+        for step in range(1, 10):
+            slow = step == 3  # one slow step only
+            for w in list(m.workers):
+                m.heartbeat(w, step, 5.0 if (w == "w1" and slow) else 1.0)
+            r = m.check(step)
+            assert "w1" not in r["stragglers"]
+        assert "w1" not in m.failed
+
+
+class TestRestartPlan:
+    def test_shrinks_data_axis_keeps_model_axis(self):
+        m = _fleet(8)
+        m.failed = {"w6", "w7"}
+        plan = RestartPlan.from_failure(
+            m, latest_ckpt_step=400, devices_per_worker=8, model_axis=16
+        )
+        assert plan.restore_step == 400
+        assert plan.new_mesh_shape[1] == 16
+        assert plan.new_mesh_shape[0] == (6 * 8) // 16
+        assert len(plan.surviving_workers) == 6
+
+
+class TestEndToEndDrill:
+    def test_detect_then_restore_then_resume(self, tmp_path):
+        """The full control-plane loop against a real (tiny) train run."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.configs.base import reduced_config
+        from repro.data.pipeline import SyntheticLM
+        from repro.models import init_params
+        from repro.models.parallel import single_device_ctx
+        from repro.optim.adamw import AdamWConfig
+        from repro.train.checkpoint import Checkpointer
+        from repro.train.trainer import init_train_state, make_train_step
+
+        cfg = reduced_config(get_config("smollm-360m")).replace(
+            num_layers=2, vocab_size=64
+        )
+        params = init_params(cfg, jax.random.key(0))
+        opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=12)
+        step_fn = jax.jit(make_train_step(cfg, single_device_ctx(), opt))
+        src = SyntheticLM(cfg.vocab_size, 16, 4, seed=0)
+        ck = Checkpointer(str(tmp_path))
+        mon = _fleet(4)
+
+        state = init_train_state(cfg, params)
+        crashed_at = None
+        for i in range(12):
+            state, _ = step_fn(state, jax.tree.map(jnp.asarray, src.batch_at(i)))
+            for w in list(mon.workers):
+                if w == "w2" and i >= 6:
+                    continue  # w2 dies at step 6
+                mon.heartbeat(w, i + 1, 1.0)
+            if (i + 1) % 4 == 0:
+                ck.save(i + 1, state, blocking=True)
+            if mon.check(i + 1)["dead"]:
+                crashed_at = i + 1
+                break
+        assert crashed_at is not None
+
+        plan = RestartPlan.from_failure(
+            mon, ck.latest_step(), devices_per_worker=1, model_axis=1
+        )
+        state2, start = ck.restore(state, step=plan.restore_step)
+        assert start <= crashed_at
+        for i in range(start, 12):  # resume deterministically (data by step)
+            state2, m = step_fn(
+                state2, jax.tree.map(jnp.asarray, src.batch_at(i))
+            )
+        assert np.isfinite(float(m["loss"]))

@@ -1,0 +1,120 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
+from repro.kernels.moe_gmm import moe_gmm, moe_gmm_ref
+from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Sk,hd,causal,window,bq,bk",
+    [
+        (1, 2, 2, 64, 64, 32, True, 0, 32, 32),     # MHA causal
+        (2, 4, 2, 64, 64, 64, True, 0, 16, 32),     # GQA
+        (1, 8, 1, 32, 32, 32, True, 0, 16, 16),     # MQA
+        (1, 2, 2, 64, 64, 32, False, 0, 32, 32),    # bidirectional
+        (1, 2, 1, 64, 64, 32, True, 24, 16, 16),    # sliding window
+        (1, 2, 2, 32, 96, 32, True, 0, 16, 32),     # cross lens (decode-ish)
+        (1, 3, 1, 48, 48, 16, True, 0, 16, 16),     # non-pow2 heads
+    ],
+)
+def test_flash_attention_sweep(B, Hq, Hkv, Sq, Sk, hd, causal, window,
+                               bq, bk, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Sk, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Sk, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,D,N,bd,bs",
+    [
+        (1, 16, 8, 4, 8, 8),
+        (2, 32, 16, 4, 8, 16),
+        (1, 24, 12, 2, 4, 8),      # non-pow2 dims
+        (2, 16, 8, 8, 8, 4),
+    ],
+)
+def test_mamba_scan_sweep(B, S, D, N, bd, bs, dtype):
+    x = jnp.asarray(RNG.normal(size=(B, S, D)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, S, D)), dtype)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    A = -jnp.exp(jnp.asarray(RNG.normal(size=(D, N)), jnp.float32))
+    Dp = jnp.asarray(RNG.normal(size=(D,)), jnp.float32)
+    got = mamba_scan(x, dt, Bm, Cm, A, Dp, block_d=bd, block_s=bs,
+                     interpret=True)
+    want = mamba_scan_ref(x, dt, Bm, Cm, A, Dp)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want, np.float32),
+        **(_tol(dtype) if dtype == jnp.bfloat16 else dict(atol=1e-4, rtol=1e-4)),
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,D,bd,bs", [(1, 32, 16, 8, 8), (2, 64, 8, 8, 32), (1, 48, 24, 12, 16)]
+)
+def test_rglru_scan_sweep(B, S, D, bd, bs, dtype):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, size=(B, S, D)), dtype)
+    bx = jnp.asarray(RNG.normal(size=(B, S, D)), dtype)
+    h0 = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
+    got = rglru_scan(a, bx, h0, block_d=bd, block_s=bs, interpret=True)
+    want = rglru_scan_ref(a, bx, h0)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want),
+        **(_tol(dtype) if dtype == jnp.bfloat16 else dict(atol=1e-4, rtol=1e-4)),
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "E,C,D,F,bc,bf",
+    [(2, 16, 16, 32, 8, 16), (4, 8, 32, 64, 8, 32), (3, 12, 8, 24, 4, 8)],
+)
+def test_moe_gmm_sweep(E, C, D, F, bc, bf, dtype):
+    h = jnp.asarray(RNG.normal(size=(E, C, D)), dtype)
+    wg = jnp.asarray(RNG.normal(size=(E, D, F)) * 0.1, dtype)
+    wu = jnp.asarray(RNG.normal(size=(E, D, F)) * 0.1, dtype)
+    wd = jnp.asarray(RNG.normal(size=(E, F, D)) * 0.1, dtype)
+    got = moe_gmm(h, wg, wu, wd, block_c=bc, block_f=bf, interpret=True)
+    want = moe_gmm_ref(h, wg, wu, wd)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_matches_model_chunked_attention():
+    """Kernel vs the model-zoo XLA path (chunked_attention)."""
+    from repro.models.attention import chunked_attention
+
+    B, Hq, Hkv, S, hd = 1, 4, 2, 64, 32
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, hd)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    a = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                        interpret=True)
+    b = chunked_attention(q, k, v, pos, pos, causal=True, chunk_q=16,
+                          chunk_k=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)

@@ -1,0 +1,111 @@
+"""Flow-level simulator vs the paper's published numbers (§5)."""
+import numpy as np
+import pytest
+
+from repro.configs.opera_paper import OPERA_648
+from repro.core.expander import random_regular_expander
+from repro.netsim.capacity import (
+    fig12_model,
+    crossover_alpha,
+    summary_648,
+)
+from repro.netsim.flows import simulate
+from repro.netsim.fluid import (
+    simulate_clos_bulk,
+    simulate_expander_bulk,
+    simulate_rotor_bulk,
+)
+from repro.netsim.workloads import (
+    byte_fraction_below,
+    demand_all_to_all,
+    demand_hotrack,
+    demand_permutation,
+    demand_skew,
+    sample_flow_sizes,
+)
+
+
+class TestWorkloads:
+    def test_datamining_bulk_byte_fraction(self):
+        # §5.1: ~4 % of Datamining bytes are below the 15 MB cutoff
+        f = byte_fraction_below("datamining", 15e6)
+        assert 0.02 <= f <= 0.07
+
+    def test_websearch_all_below_cutoff(self):
+        # §5.3: Websearch is entirely below the bulk cutoff
+        assert byte_fraction_below("websearch", 15e6) >= 0.95
+
+    def test_sampler_within_support(self):
+        s = sample_flow_sizes("hadoop", 10_000, np.random.default_rng(0))
+        assert s.min() >= 100 and s.max() <= 100e6
+
+    def test_demands(self):
+        d = demand_all_to_all(8, 4, 100.0)
+        assert d[0, 0] == 0 and d[0, 1] == 4 * 4 * 100.0
+        assert demand_hotrack(8, 4, 10.0).sum() == 40.0
+        p = demand_permutation(8, 4, 10.0)
+        assert (p.sum(1) > 0).all() and np.diag(p).sum() == 0
+        assert demand_skew(10, 4, 10.0, 0.2).sum() > 0
+
+
+class TestShuffleFig8:
+    """100 KB all-to-all (Fig. 8): Opera ~60 ms vs ~220+ ms static."""
+
+    def test_opera_60ms_and_taxfree(self):
+        d = demand_all_to_all(108, 6, 100e3)
+        r = simulate_rotor_bulk(OPERA_648, d, vlb=False, max_cycles=40)
+        assert 50 <= r.fct_99_ms <= 85          # paper: 60 ms
+        assert r.bandwidth_tax < 0.01           # direct paths: no tax
+
+    def test_static_networks_3x_slower(self):
+        d = demand_all_to_all(108, 6, 100e3)
+        opera = simulate_rotor_bulk(OPERA_648, d, vlb=False, max_cycles=40)
+        clos = simulate_clos_bulk(648, d, 10.0, 3.0)
+        adj = random_regular_expander(130, 7, seed=1)
+        exp = simulate_expander_bulk(
+            adj, demand_all_to_all(130, 5, 100e3), 10.0, dt_us=2000.0
+        )
+        assert clos.fct_99_ms / opera.fct_99_ms > 1.8
+        assert exp.fct_99_ms / opera.fct_99_ms > 1.8
+        assert exp.bandwidth_tax > 1.0          # multi-hop tax on every byte
+
+
+class TestCapacityModel:
+    def test_summary_matches_paper(self):
+        s = summary_648()
+        assert 0.08 <= s["opera_latency_load"] <= 0.13   # §5.3: ~10 %
+        assert 0.22 <= s["expander_load"] <= 0.30        # ~25 %
+        assert 0.55 <= s["capacity_ratio"] <= 0.65       # "60 % of capacity"
+
+    def test_fig12_shuffle_2x_even_at_alpha2(self):
+        r = fig12_model(2.0, "shuffle")
+        assert r["opera"] / max(r["expander"], r["clos"]) >= 1.6
+
+    def test_fig12_crossover_near_paper(self):
+        # paper: statics win for alpha > ~1.8 on permutation/skew
+        a = crossover_alpha("permutation")
+        assert 1.3 <= a <= 2.6
+
+    def test_fig12_hotrack_comparable(self):
+        r = fig12_model(1.3, "hotrack")
+        assert r["opera"] >= 0.55 * r["expander"]
+
+
+class TestFlowSim:
+    def test_opera_datamining_carries_more_load_than_static(self):
+        opera = simulate("opera", "datamining", 0.30, horizon_s=1.6, seed=1)
+        expander = simulate("expander", "datamining", 0.30, horizon_s=1.6, seed=1)
+        assert opera.backlog_frac < expander.backlog_frac
+
+    def test_websearch_opera_admits_10pct(self):
+        r = simulate("opera", "websearch", 0.08, horizon_s=0.8, seed=1)
+        assert r.admitted
+        r = simulate("opera", "websearch", 0.20, horizon_s=0.8, seed=1)
+        assert not r.admitted                    # §5.3: saturates ~10 %
+
+    def test_rotornet_low_latency_is_msscale(self):
+        # Fig. 7c: non-hybrid RotorNet short-flow FCT ~ cycle time (ms),
+        # 100-1000x worse than Opera's expander path (~us-scale baseline)
+        rn = simulate("rotornet", "datamining", 0.05, horizon_s=0.8, seed=1)
+        op = simulate("opera", "datamining", 0.05, horizon_s=0.8, seed=1)
+        assert rn.fct_p99_ms_small > 20 * op.fct_p99_ms_small

@@ -1,0 +1,88 @@
+"""End-to-end behaviour of the paper's system: the Opera properties that
+make the whole design work, checked against each other (not just units).
+
+1. The same matching schedule drives BOTH the network simulator and the
+   JAX collectives — one design-time artifact, two consumers.
+2. The two traffic classes trade exactly as §3 describes: bulk is
+   tax-free but waits; latency is immediate but taxed.
+3. The end-to-end cycle arithmetic makes the 15 MB bulk/latency split
+   self-consistent with the workloads it serves.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.opera_paper import OPERA_648
+from repro.core.classify import Classifier, TrafficClass, effective_tax_rate
+from repro.core.collectives import schedule_stats
+from repro.core.schedule import cycle_timing
+from repro.core.topology import build_opera_topology, rotor_schedule
+from repro.netsim.fluid import simulate_rotor_bulk
+from repro.netsim.workloads import byte_fraction_below, demand_all_to_all
+
+
+def test_one_schedule_two_consumers():
+    """The collective schedule is the N-matching factorization the network
+    uses: every ordered pair served exactly once — so a rotor collective's
+    wire-byte ledger equals the fluid simulator's tax accounting."""
+    n = 16
+    sched = rotor_schedule(n)
+    seen = np.zeros((n, n))
+    for pairs in sched:
+        for s, d in pairs:
+            seen[s, d] += 1
+    assert (seen[~np.eye(n, dtype=bool)] == 1).all()
+    st = schedule_stats(n)
+    # bulk a2a: (n-1)/n of payload crosses exactly one link -> tax 0
+    assert st["rotor_a2a_bytes"] == pytest.approx((n - 1) / n)
+    # and the fluid sim measures the same zero tax on a real shuffle
+    r = simulate_rotor_bulk(
+        OPERA_648, demand_all_to_all(108, 6, 100e3), vlb=False, max_cycles=40
+    )
+    assert r.bandwidth_tax < 0.01
+
+
+def test_traffic_class_tradeoff():
+    """Latency class pays a tax >= (diameter-1); bulk class pays zero but
+    waits up to a cycle — both sides of §3.4's per-packet choice."""
+    st = schedule_stats(16, u=3)
+    assert st["bandwidth_tax_latency"] >= 1.0     # multi-hop tax
+    assert st["rotor_a2a_vlb_bytes"] == pytest.approx(
+        2 * st["rotor_a2a_bytes"]
+    )                                              # VLB: exactly 100 % tax
+    t = cycle_timing(OPERA_648)
+    assert t.cycle_ms < 15                         # bounded bulk wait
+
+
+def test_cutoff_is_self_consistent_with_workloads():
+    """The 15 MB cutoff derived from the cycle time must (a) put ~all
+    Websearch bytes on the latency path and (b) only a few % of
+    Datamining bytes — which is what makes the 8.4 % effective tax and
+    the 40 %-load headline possible."""
+    t = cycle_timing(OPERA_648)
+    cutoff = t.bulk_cutoff_mb * 2**20
+    assert byte_fraction_below("websearch", cutoff) > 0.9
+    dm = byte_fraction_below("datamining", cutoff)
+    assert dm < 0.08
+    assert 0.04 <= effective_tax_rate(dm, 3.34) <= 0.11
+
+
+def test_classifier_respects_cycle_derived_cutoff():
+    t = cycle_timing(OPERA_648)
+    c = Classifier(bulk_cutoff_bytes=int(t.bulk_cutoff_mb * 2**20))
+    assert c.classify(100 * 2**20) is TrafficClass.BULK
+    assert c.classify(1 * 2**20) is TrafficClass.LATENCY
+
+
+def test_topology_survives_schedule_perturbation():
+    """Grouped reconfiguration (App. B) halves the cycle but must keep
+    both invariants: per-slice connectivity and full pair coverage.
+    Per §3.1.1 grouping applies to many-switch networks: u - groups live
+    matchings must still form an expander (u=8, groups=2 -> 6 live)."""
+    topo = build_opera_topology(24, 8, seed=1, groups=2)
+    ds = topo.direct_slice()
+    assert (ds[~np.eye(24, dtype=bool)] >= 0).all()
+    from repro.core.expander import mean_max_path
+
+    for t in range(topo.num_slices):
+        _, _, disc = mean_max_path(topo.adjacency(t))
+        assert disc == 0

@@ -1,0 +1,103 @@
+"""Topology-generation invariants (§3.3) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    OperaTopology,
+    build_opera_topology,
+    conjugate,
+    lift_matchings,
+    random_matchings,
+    rotor_schedule,
+    sum_matchings,
+    verify_factorization,
+)
+
+
+class TestFactorization:
+    def test_sum_matchings_factor(self):
+        verify_factorization(sum_matchings(8))
+        verify_factorization(sum_matchings(9))
+
+    @settings(deadline=None, max_examples=20)
+    @given(st.integers(2, 24).map(lambda k: 2 * k))
+    def test_random_factorization_even_n(self, n):
+        ms = random_matchings(n, seed=n)
+        verify_factorization(ms)
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.integers(2, 10).map(lambda k: 2 * k),
+           st.integers(0, 2**16))
+    def test_conjugation_preserves_factorization(self, n, seed):
+        rng = np.random.default_rng(seed)
+        ms = conjugate(sum_matchings(n), rng.permutation(n))
+        verify_factorization(ms)
+
+    @settings(deadline=None, max_examples=8)
+    @given(st.sampled_from([2, 4, 6]), st.sampled_from([2, 3, 4]))
+    def test_lifting(self, n, f):
+        lifted = lift_matchings(random_matchings(n, seed=1), f)
+        assert len(lifted) == n * f
+        verify_factorization(lifted)
+
+    def test_odd_n_supported(self):
+        verify_factorization(random_matchings(9, seed=0))
+
+
+class TestOperaTopology:
+    @pytest.fixture(scope="class")
+    def topo(self):
+        return build_opera_topology(24, 4, seed=0)
+
+    def test_direct_circuit_every_pair_once_per_cycle(self, topo):
+        ds = topo.direct_slice()
+        off = ~np.eye(topo.num_racks, dtype=bool)
+        assert (ds[off] >= 0).all(), "some pair never connected in a cycle"
+
+    def test_staggered_reconfiguration(self, topo):
+        # exactly `groups` switches dark per slice, round-robin
+        for t in range(topo.num_slices):
+            dark = topo.dark_switches(t)
+            assert len(dark) == topo.groups
+
+    def test_connectivity_every_slice(self, topo):
+        from repro.core.expander import mean_max_path
+
+        for t in range(0, topo.num_slices, 5):
+            _, _, disc = mean_max_path(topo.adjacency(t))
+            assert disc == 0, f"slice {t} disconnected"
+
+    def test_live_degree_bounded(self, topo):
+        for t in range(0, topo.num_slices, 7):
+            adj = topo.adjacency(t)
+            deg = adj.sum(1)
+            assert deg.max() <= topo.u - topo.groups + 1
+
+    def test_grouped_reconfiguration_shortens_cycle(self):
+        t1 = build_opera_topology(24, 4, seed=0, groups=1)
+        t2 = build_opera_topology(24, 4, seed=0, groups=2)
+        assert t2.num_slices == t1.num_slices // 2
+        ds = t2.direct_slice()
+        assert (ds[~np.eye(24, dtype=bool)] >= 0).all()
+
+
+class TestRotorSchedule:
+    @settings(deadline=None, max_examples=16)
+    @given(st.integers(2, 17))
+    def test_rotor_schedule_covers_all_pairs_once(self, n):
+        seen = np.zeros((n, n), dtype=int)
+        for pairs in rotor_schedule(n):
+            for s, d in pairs:
+                seen[s, d] += 1
+        off = ~np.eye(n, dtype=bool)
+        assert (seen[off] == 1).all()
+        assert (np.diag(seen) == 0).all()
+
+    @settings(deadline=None, max_examples=16)
+    @given(st.integers(2, 17))
+    def test_rotor_schedule_matchings_are_involutions(self, n):
+        for pairs in rotor_schedule(n):
+            d = dict(pairs)
+            for s, t in pairs:
+                assert d[t] == s
