@@ -24,16 +24,16 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, jax, jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import collectives as C
 from repro.analysis.hlo_cost import analyze
 
-mesh = jax.make_mesh((8,), ("d",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("d",))
 N = 8
 SZ = 1 << 14  # floats per shard
 
 def wire(fn, shape):
-    f = jax.shard_map(fn, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
+    f = compat.shard_map(fn, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
                       check_vma=False)
     spec = jax.ShapeDtypeStruct(shape, jnp.float32)
     hlo = jax.jit(f).lower(spec).compile().as_text()

@@ -1,21 +1,23 @@
-"""Fig. 8: 100 KB all-to-all shuffle — Opera ~4x the static networks."""
+"""Fig. 8: 100 KB all-to-all shuffle — Opera ~4x the static networks.
+
+The Opera run goes through the batched JAX engine (netsim/fluid_jax.py,
+a batch of one here); the static comparisons stay on the closed-form /
+numpy fluid paths.
+"""
 from __future__ import annotations
 
 from benchmarks.common import banner, check, save
 from repro.configs.opera_paper import OPERA_648
 from repro.core.expander import random_regular_expander
-from repro.netsim.fluid import (
-    simulate_clos_bulk,
-    simulate_expander_bulk,
-    simulate_rotor_bulk,
-)
+from repro.netsim.fluid import simulate_clos_bulk, simulate_expander_bulk
+from repro.netsim.fluid_jax import simulate_rotor_bulk_jax
 from repro.netsim.workloads import demand_all_to_all
 
 
 def run() -> dict:
     banner("Fig. 8 — 100 KB shuffle (all-to-all), 648 hosts")
     d = demand_all_to_all(108, 6, 100e3)
-    opera = simulate_rotor_bulk(OPERA_648, d, vlb=False, max_cycles=40)
+    opera = simulate_rotor_bulk_jax(OPERA_648, d, vlb=False, max_cycles=40)
     clos = simulate_clos_bulk(648, d, 10.0, 3.0)
     adj = random_regular_expander(130, 7, seed=1)
     exp = simulate_expander_bulk(

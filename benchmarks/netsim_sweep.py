@@ -1,0 +1,70 @@
+"""Whole-grid scenario sweep through the batched JAX fluid engine.
+
+Exercises the path the bulk figures ride: per design point, the full
+(workload x load x seed) grid is simulated in ONE vmapped/jitted call
+(16 scenarios per design here).  Checks the physical invariants the
+engine must honor across the grid — this is the benchmark-level analogue
+of tests/test_netsim_jax.py run at sweep scale.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import banner, check, save
+from repro.netsim.sweep import DesignPoint, SweepSpec, run_sweep, summarize
+
+
+def run() -> dict:
+    banner("Scenario sweep — batched fluid engine over a design grid")
+    spec = SweepSpec(
+        designs=(
+            DesignPoint(k=8, num_racks=16),
+            DesignPoint(k=8, num_racks=16, groups=2),
+        ),
+        workloads=("shuffle", "permutation", "skew", "hotrack"),
+        loads=(0.2, 0.6),
+        seeds=(0, 1),
+        max_cycles=80,
+    )
+    t0 = time.time()
+    rows = run_sweep(spec)
+    dt = time.time() - t0
+    summary = summarize(rows)
+    for s in summary:
+        print(f"  {s['design']:12s} {s['workload']:11s} load={s['load']:.1f} "
+              f"fct99={s['fct_99_ms']:8.3f} ms  tput={s['throughput_frac']:.3f} "
+              f"tax={s['bandwidth_tax']:.2f}  fin={s['finished_frac']:.4f}")
+    print(f"  {len(rows)} scenarios ({spec.scenarios_per_design}/design "
+          f"vmapped) in {dt:.1f}s")
+
+    ok1 = check("16 scenarios per design in one vmapped call",
+                spec.scenarios_per_design == 16)
+    ok2 = check("every scenario delivered its demand",
+                all(r["finished_frac"] >= 0.999 for r in rows))
+    ok3 = check("bandwidth tax is never negative",
+                all(r["bandwidth_tax"] >= -1e-6 for r in rows))
+    by_key = {}
+    for r in rows:
+        by_key.setdefault(
+            (r["design"], r["workload"], r["seed"]), []
+        ).append((r["load"], r["fct_99_ms"]))
+    mono = all(
+        a[1] <= b[1] + 1e-9
+        for v in by_key.values()
+        for a, b in zip(sorted(v), sorted(v)[1:])
+    )
+    ok4 = check("completion time monotone in load per scenario", mono)
+    grouped = [r for r in rows if r["groups"] == 2]
+    ungrouped = [r for r in rows if r["groups"] == 1]
+    ok5 = check(
+        "grouped reconfiguration halves the cycle (App. B)",
+        grouped[0]["cycle_ms"] < 0.6 * ungrouped[0]["cycle_ms"],
+        f"{grouped[0]['cycle_ms']:.2f} vs {ungrouped[0]['cycle_ms']:.2f} ms",
+    )
+    return dict(rows=rows, summary=summary, wall_s=dt,
+                checks=dict(batch=ok1, finished=ok2, tax=ok3, monotone=ok4,
+                            groups=ok5))
+
+
+if __name__ == "__main__":
+    save("netsim_sweep", run())

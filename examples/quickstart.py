@@ -9,6 +9,7 @@
 import numpy as np
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 
 from repro.configs.opera_paper import OPERA_648
@@ -42,14 +43,13 @@ from repro.core import collectives as C  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 n = len(jax.devices())
-mesh = jax.make_mesh((n, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((n, 1), ("data", "model"))
 grads = jnp.arange(8.0 * n).reshape(n, 8)
-rotor = jax.jit(jax.shard_map(
+rotor = jax.jit(compat.shard_map(
     lambda g: C.rotor_all_reduce(g, "data"),
     mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False,
 ))(grads)
-want = jax.jit(jax.shard_map(
+want = jax.jit(compat.shard_map(
     lambda g: jax.lax.psum(g, "data"),
     mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False,
 ))(grads)

@@ -1,4 +1,5 @@
-"""Dev driver: run reduced-config fwd/train/prefill/decode for all archs."""
+"""Dev driver: run reduced-config fwd/train/prefill/decode for all archs,
+then a tiny netsim sweep through the batched JAX fluid engine."""
 import sys
 
 import jax
@@ -66,3 +67,21 @@ for arch in list_archs():
         f"gnorm={float(gnorm):.3f}"
     )
 print("ALL ARCH SMOKE PASSED")
+
+# netsim: one design point's (workload x load) grid in a single vmapped call
+from repro.netsim.sweep import DesignPoint, SweepSpec, run_sweep
+
+rows = run_sweep(
+    SweepSpec(
+        designs=(DesignPoint(k=4, num_racks=8),),
+        workloads=("shuffle", "permutation"),
+        loads=(0.2,),
+        seeds=(0,),
+        max_cycles=60,
+    )
+)
+assert all(r["finished_frac"] >= 0.999 for r in rows), rows
+assert all(r["bandwidth_tax"] >= -1e-6 for r in rows), rows
+print(f"ok netsim sweep: {len(rows)} scenarios, "
+      f"fct99={rows[0]['fct_99_ms']:.2f} ms")
+print("SWEEP SMOKE PASSED")

@@ -1,0 +1,110 @@
+"""Version-compat shims for the pinned accelerator stack.
+
+The codebase is written against the modern jax surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``) while the seed
+container pins jax 0.4.37, where the same machinery lives under older
+names with an older keyword surface.  Policy: **all** repro code (src,
+tests, benchmarks, examples) imports these three symbols from
+``repro.compat`` instead of touching ``jax.*`` directly, so a future jax
+bump is a one-file change.
+
+shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=..., axis_names=...)
+    Modern call surface on every jax.  On 0.4.x it lowers onto
+    ``jax.experimental.shard_map.shard_map`` with
+
+      * ``check_vma``   -> ``check_rep``
+      * ``axis_names``  -> ``auto = mesh.axis_names - axis_names``
+        (partial-manual binding: unnamed axes stay GSPMD-auto inside)
+      * ``mesh=None``   -> the ambient mesh installed by ``set_mesh``
+        (0.4.x shard_map requires a concrete mesh argument).
+
+make_mesh(shape, axes)
+    ``jax.make_mesh`` with explicitly Auto axis types where the kwarg
+    exists; plain ``jax.make_mesh`` on 0.4.x (every axis is Auto there).
+
+set_mesh(mesh)
+    Context manager installing `mesh` as the ambient mesh.  Native
+    ``jax.set_mesh`` when present; the classic ``with mesh:`` thread
+    resource otherwise (which is exactly what 0.4.x shard_map/jit read).
+"""
+from __future__ import annotations
+
+import jax
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+# Partial-manual binding (axis_names a strict subset of the mesh, the rest
+# staying GSPMD-auto inside) exists on 0.4.x as the experimental ``auto=``
+# kwarg but hard-aborts in XLA's sharding propagation on CPU
+# (hlo_sharding_util: `sharding.IsManualSubgroup()` check).  Callers that
+# need a partial-manual region must consult this flag and fall back to a
+# pure-GSPMD formulation when it is False.
+HAS_PARTIAL_MANUAL = HAS_NATIVE_SHARD_MAP
+
+
+if HAS_NATIVE_SHARD_MAP:
+
+    def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=True,
+                  axis_names=None):
+        kw = dict(in_specs=in_specs, out_specs=out_specs, check_vma=check_vma)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, **kw)
+
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def _ambient_mesh():
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m.empty:
+            raise ValueError(
+                "shard_map(mesh=None) needs an ambient mesh: wrap the call "
+                "in repro.compat.set_mesh(mesh) on jax 0.4.x"
+            )
+        return m
+
+    def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=True,
+                  axis_names=None):
+        m = mesh if mesh is not None else _ambient_mesh()
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(m.axis_names) - frozenset(axis_names)
+        # legacy partial-manual (auto nonempty) cannot check replication
+        return _legacy_shard_map(
+            f, mesh=m, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma and not auto, auto=auto,
+        )
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a bound mesh axis (``lax.axis_size`` on modern jax;
+    the trace-time-constant ``psum(1, axis)`` fold on 0.4.x)."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axes, devices=None):
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
+
+
+def set_mesh(mesh):
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    # 0.4.x: Mesh is itself the ambient-mesh context manager
+    return mesh
+
+
+__all__ = ["HAS_NATIVE_SHARD_MAP", "HAS_PARTIAL_MANUAL", "axis_size",
+           "shard_map", "make_mesh", "set_mesh"]

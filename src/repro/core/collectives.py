@@ -55,7 +55,9 @@ def _perm_pairs(p: np.ndarray) -> list[tuple[int, int]]:
 
 
 def _axis_size(axis_name) -> int:
-    return lax.axis_size(axis_name)
+    from repro.compat import axis_size
+
+    return axis_size(axis_name)
 
 
 def _split_leading(x: jnp.ndarray, n: int) -> jnp.ndarray:

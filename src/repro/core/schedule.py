@@ -82,6 +82,17 @@ def cycle_timing(cfg: OperaNetConfig, worst_hops: int = 5) -> CycleTiming:
     )
 
 
+def slice_capacity_bytes(cfg: OperaNetConfig, timing: CycleTiming = None) -> float:
+    """Byte budget of one live circuit during one slice (duty-derated).
+
+    A plain python float on purpose: both fluid engines (numpy reference
+    and the jnp/scan batched engine) consume it as a static scalar, so it
+    never becomes a traced value and the jitted step stays shape-stable.
+    """
+    t = timing or cycle_timing(cfg)
+    return cfg.link_rate_gbps * 1e9 / 8 * (t.slice_us * 1e-6) * t.duty_cycle
+
+
 def scaled_cycle_table(k_values=(12, 24, 36, 48, 64), groups_of: int = 6) -> list:
     """Appendix B: grouped reconfiguration keeps cycle time ~linear in k.
 

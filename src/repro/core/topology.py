@@ -282,6 +282,21 @@ class OperaTopology:
             adj[i[mask], p[mask]] = True
         return adj
 
+    def matching_tensor(self) -> np.ndarray:
+        """Dense export of the whole cycle for array engines.
+
+        Returns a ``(num_slices, N, N)`` float32 tensor whose slice ``t``
+        is the live rack-to-rack adjacency (1.0 where racks i-j hold a
+        direct circuit during slice t, self-loops dropped).  Because the
+        factorization is exact, each off-diagonal pair is live on exactly
+        one slice per cycle.  This is the design-time artifact the
+        batched JAX fluid engine (netsim/fluid_jax.py) scans over — no
+        topology math happens inside the simulation loop.
+        """
+        return np.stack(
+            [self.adjacency(t) for t in range(self.num_slices)]
+        ).astype(np.float32)
+
     def direct_slice(self) -> np.ndarray:
         """direct[i, j] = first slice in which i-j have a direct circuit.
 

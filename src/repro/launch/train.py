@@ -15,6 +15,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import set_mesh
 from repro.configs import get_config
 from repro.configs.base import reduced_config
 from repro.data.pipeline import SyntheticLM, device_batches
@@ -98,7 +99,7 @@ def main(argv=None):
           f"floor={src.conditional_entropy():.3f} nats")
     t0 = time.time()
     losses = []
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for step in range(start_step, args.steps):
             batch = next(batches)
             state, metrics = jitted(state, batch)

@@ -25,12 +25,11 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core import collectives as C
 from repro.models.layers import act_fn, dense_init
 from repro.models.parallel import ParallelContext
-
-shard_map = jax.shard_map
 
 
 # ---------------- params ---------------------------------------------------

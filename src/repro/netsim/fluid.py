@@ -6,6 +6,18 @@ relay when capacity is spare and demand is skewed).  This engine steps
 topology slices, moving bytes over live matchings — faithful to §4.2.2
 and sufficient for every bulk-side figure (8, 10, 12) of the paper.
 
+This module is the **numpy reference oracle**.  The per-slice recurrence
+(`rotor_slice_step`) is a deterministic, fully-vectorized function of
+the dense slice adjacency exported by `OperaTopology.matching_tensor`;
+the batched jnp engine in `netsim/fluid_jax.py` implements *identical*
+math (lockstep-tested by tests/test_netsim_jax.py) and is the one the
+benchmark sweeps run on.  RotorLB's VLB spreading is modeled as a
+proportional fluid allocation: each rack offers its queued backlog to
+all live partners in proportion to their spare circuit room (rather
+than the earlier greedy top-4 heuristic), which is both closer to a
+fluid limit of RotorLB's per-slot offers and expressible as one
+matmul — the property that lets the jnp engine scan it.
+
 Static networks are served by a max-min fluid share over their fixed
 graphs (expander) or their oversubscription bottleneck (folded Clos).
 """
@@ -17,7 +29,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.opera_paper import OperaNetConfig
-from repro.core.schedule import cycle_timing
+from repro.core.schedule import cycle_timing, slice_capacity_bytes
 from repro.core.topology import OperaTopology, build_opera_topology
 
 
@@ -37,6 +49,55 @@ class RotorFluidResult:
         return self.wire_bytes / max(self.goodput_bytes, 1.0) - 1.0
 
 
+def rotor_slice_step(
+    own: np.ndarray,
+    relay: np.ndarray,
+    adj_cap: np.ndarray,
+    vlb: bool = True,
+) -> Tuple[np.ndarray, np.ndarray, float, float]:
+    """One topology slice of the rotor fluid recurrence.
+
+    `adj_cap[i, j]` is the byte budget of the i-j circuit this slice
+    (0 where dark).  Three phases, each a dense array op:
+
+      1. direct drain: own traffic for the connected partner;
+      2. relay drain: 2-hop traffic now one hop from its destination;
+      3. RotorLB VLB: leftover circuit room carries queued own traffic
+         to the partner as relay (the taxed first hop), source backlog
+         offered proportionally and partner room filled proportionally —
+         ``relay += (room / row_room).T @ take`` in one matmul.
+
+    This function is the semantic contract for the batched jnp engine
+    (`fluid_jax._slice_step` implements the same math); change the two
+    together.  Returns (own, relay, delivered_bytes, vlb_first_hop_bytes).
+    """
+    send_own = np.minimum(own, adj_cap)
+    own = own - send_own
+    room = adj_cap - send_own
+    send_relay = np.minimum(relay, room)
+    relay = relay - send_relay
+    room = room - send_relay
+    delivered = float(send_own.sum() + send_relay.sum())
+
+    moved = 0.0
+    if vlb:
+        # backlog eligible for spreading: not deliverable directly this
+        # slice (a live pair's residual would arrive anyway, and relaying
+        # it to its own destination would strand bytes on the diagonal)
+        elig = np.where(adj_cap > 0, 0.0, own)
+        q = elig.sum(1)                       # spreadable backlog per rack
+        r = room.sum(1)                       # spare circuit room per rack
+        t = np.minimum(q, r)                  # bytes rack s may spread
+        take = elig * np.divide(t, q, out=np.zeros_like(q), where=q > 0)[:, None]
+        share = room * np.divide(
+            np.ones_like(r), r, out=np.zeros_like(r), where=r > 0
+        )[:, None]                            # partner share of s's spread
+        own = own - take
+        relay = relay + share.T @ take
+        moved = float(t.sum())                # first hop of the 2-hop path
+    return own, relay, delivered, moved
+
+
 def simulate_rotor_bulk(
     cfg: OperaNetConfig,
     demand: np.ndarray,            # rack->rack bytes (bulk class)
@@ -48,8 +109,8 @@ def simulate_rotor_bulk(
     n = cfg.num_racks
     topo = topo or build_opera_topology(n, cfg.u, seed=seed, groups=cfg.groups)
     t = cycle_timing(cfg)
-    slice_s = t.slice_us * 1e-6
-    cap = cfg.link_rate_gbps * 1e9 / 8 * slice_s * t.duty_cycle  # bytes/link/slice
+    cap = slice_capacity_bytes(cfg, t)       # bytes/link/slice
+    adj_caps = topo.matching_tensor().astype(np.float64) * cap
 
     own = demand.astype(np.float64).copy()
     relay = np.zeros_like(own)
@@ -57,50 +118,14 @@ def simulate_rotor_bulk(
     done = 0.0
     wire = 0.0
     finished, times = [], []
-    per_pair_left = own.copy()
 
     steps = 0
     for step in range(max_cycles * topo.num_slices):
-        tslice = step % topo.num_slices
-        for _, p in topo.live_matchings(tslice):
-            idx = np.arange(n)
-            mask = p != idx
-            srcs = idx[mask]
-            dsts = p[mask]
-            # 1) direct: own traffic for the connected partner
-            send_own = np.minimum(own[srcs, dsts], cap)
-            own[srcs, dsts] -= send_own
-            # 2) relayed traffic now one hop from its destination
-            room = cap - send_own
-            send_relay = np.minimum(relay[srcs, dsts], room)
-            relay[srcs, dsts] -= send_relay
-            room -= send_relay
-            delivered = send_own + send_relay
-            done += delivered.sum()
-            wire += (send_own + send_relay).sum()
-            per_pair_left[srcs, dsts] = np.maximum(
-                per_pair_left[srcs, dsts] - send_own, 0.0
-            )
-            # 3) RotorLB VLB: spare capacity spreads own queued traffic to
-            #    the partner as a relay (delivered next cycle) — only when
-            #    the partner's relay queue isn't already deep (fairness).
-            if vlb:
-                for k in range(len(srcs)):
-                    r = room[k]
-                    if r <= 0:
-                        continue
-                    s, m = srcs[k], dsts[k]
-                    row = own[s]
-                    # spread from the largest backlogs first
-                    for dd in np.argsort(row)[::-1][:4]:
-                        if row[dd] <= 0 or dd == m or r <= 0:
-                            continue
-                        mv = min(row[dd], r)
-                        own[s, dd] -= mv
-                        relay[m, dd] += mv
-                        wire += mv  # first hop of the 2-hop path (the tax)
-                        r -= mv
-                    room[k] = r
+        own, relay, delivered, moved = rotor_slice_step(
+            own, relay, adj_caps[step % topo.num_slices], vlb
+        )
+        done += delivered
+        wire += delivered + moved
         steps += 1
         finished.append(done / max(total, 1.0))
         times.append((step + 1) * t.slice_us)

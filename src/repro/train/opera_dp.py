@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core import collectives as C
 from repro.models.model import loss_fn
@@ -83,7 +84,7 @@ def make_opera_dp_train_step(
 
     batch_spec = P(tuple(pctx.dp_axes))
     rep = P()
-    mapped = jax.shard_map(
+    mapped = shard_map(
         per_shard,
         mesh=mesh,
         in_specs=(rep, rep, rep, batch_spec),

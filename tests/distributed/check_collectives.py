@@ -14,12 +14,12 @@ import numpy as np  # noqa: E402
 from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-shard_map = jax.shard_map
-
+from repro import compat  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+shard_map = compat.shard_map
+
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 rng = np.random.default_rng(0)
 
 

@@ -8,7 +8,8 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax  # noqa: E402
+import jax
+from repro import compat  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
@@ -49,7 +50,7 @@ ref_loss = float(m_ref["loss"])
 # gspmd multi-device (params sharded by rules; batch sharded over dp)
 pctx = pctx_for_mesh(mesh, grad_sync="xla")
 shardings = param_shardings(param_shapes(cfg), cfg, pctx)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     sh_params = jax.device_put(params, shardings)
     state = init_train_state(cfg, sh_params)
     bsh = jax.tree.map(
@@ -64,7 +65,7 @@ print("ok: gspmd multi-device trainer matches single-device loss")
 
 # rotor pod-sync trainer
 pctx_r = pctx_for_mesh(mesh, grad_sync="rotor")
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     state_r = init_train_state(cfg, jax.device_put(params, shardings))
     state_r, m_r = jax.jit(make_train_step(cfg, pctx_r, opt))(state_r, bsh)
 assert abs(float(m_r["loss"]) - ref_loss) < 1e-3
@@ -76,7 +77,7 @@ for x, y in zip(pa, pb):
 print("ok: rotor pod-sync trainer matches gspmd updates")
 
 # opera-dp explicit trainer
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     s_dp = init_opera_dp_state(params)
     s_dp, m_dp = jax.jit(make_opera_dp_train_step(cfg, pctx_r, opt))(s_dp, batch)
 assert abs(float(m_dp["loss"]) - ref_loss) < 1e-3
@@ -93,7 +94,7 @@ losses = {}
 for dispatch in ("rotor", "rotor_vlb", "xla"):
     pctx_m = pctx_for_mesh(mesh, moe_dispatch=dispatch)
     mshard = param_shardings(param_shapes(mcfg), mcfg, pctx_m)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         shp = jax.device_put(mparams, mshard)
         bsh = jax.tree.map(
             lambda x: jax.device_put(

@@ -1,5 +1,9 @@
 """Loop-aware HLO cost model vs unrolled ground truth."""
 import jax
+
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
 import jax.numpy as jnp
 import pytest
 from jax import lax
@@ -77,9 +81,7 @@ class TestCollectiveAccounting:
     def test_psum_inside_scan_multiplied(self):
         """Naive text grep counts loop collectives once; analyze() must
         multiply by trip count."""
-        mesh = jax.make_mesh(
-            (1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        mesh = compat.make_mesh((1,), ("d",))
 
         def f(x):
             def per(a):
@@ -87,8 +89,8 @@ class TestCollectiveAccounting:
                     return lax.psum(c, "d") * 0.5, None
                 y, _ = lax.scan(body, a, None, length=7)
                 return y
-            return jax.shard_map(
-                per, mesh=mesh, in_specs=jax.P("d"), out_specs=jax.P("d"),
+            return compat.shard_map(
+                per, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
                 check_vma=False,
             )(x)
 

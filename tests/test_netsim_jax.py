@@ -1,0 +1,211 @@
+"""Batched JAX fluid engine: numpy-oracle parity + physical invariants.
+
+The contract under test: `fluid_jax._slice_step` implements *identical*
+math to `fluid.rotor_slice_step`, so the two engines must agree on every
+emitted statistic (float32 vs float64 is the only divergence), and both
+must honor byte conservation, a non-negative bandwidth tax, and a
+monotone finished fraction on any Opera config.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.opera_paper import OperaNetConfig
+from repro.core.topology import build_opera_topology
+from repro.netsim.fluid import rotor_slice_step, simulate_rotor_bulk
+from repro.netsim.fluid_jax import (
+    simulate_rotor_bulk_batch,
+    simulate_rotor_bulk_jax,
+)
+from repro.netsim.sweep import (
+    DesignPoint,
+    SweepSpec,
+    run_design,
+    scenario_demand,
+)
+from repro.netsim.workloads import (
+    demand_all_to_all,
+    demand_hotrack,
+    demand_permutation,
+    demand_skew,
+)
+
+TINY = OperaNetConfig(name="tiny-32", k=4, num_racks=8, hosts_per_rack=2,
+                      num_circuit_switches=2)
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return build_opera_topology(TINY.num_racks, TINY.u, seed=0)
+
+
+def _demands():
+    return {
+        "shuffle": demand_all_to_all(8, 2, 1e6),
+        "permutation": demand_permutation(8, 2, 5e7, seed=3),
+        "skew": demand_skew(8, 2, 2e7, active_frac=0.4, seed=1),
+        "hotrack": demand_hotrack(8, 2, 3e7),
+    }
+
+
+class TestParity:
+    @pytest.mark.parametrize("vlb", [False, True])
+    @pytest.mark.parametrize("workload", list(_demands()))
+    def test_matches_numpy_oracle(self, topo, vlb, workload):
+        d = _demands()[workload]
+        a = simulate_rotor_bulk(TINY, d, vlb=vlb, max_cycles=200, topo=topo)
+        b = simulate_rotor_bulk_jax(TINY, d, vlb=vlb, max_cycles=200,
+                                    topo=topo)
+        assert a.slices_run == b.slices_run
+        assert np.isclose(a.fct_mean_ms, b.fct_mean_ms, rtol=1e-4)
+        if np.isfinite(a.fct_99_ms):
+            assert np.isclose(a.fct_99_ms, b.fct_99_ms, rtol=1e-4)
+        else:
+            assert not np.isfinite(b.fct_99_ms)
+        assert np.isclose(a.throughput_gbps, b.throughput_gbps, rtol=1e-4)
+        assert np.isclose(a.goodput_bytes, b.goodput_bytes, rtol=1e-4)
+        assert np.isclose(a.wire_bytes, b.wire_bytes, rtol=1e-4)
+        assert np.isclose(a.bandwidth_tax, b.bandwidth_tax, atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(a.finished_frac),
+            np.asarray(b.finished_frac),
+            atol=1e-5,
+        )
+
+    def test_single_step_lockstep(self, topo):
+        """One raw slice step, numpy vs jnp, element-exact tolerances."""
+        import jax.numpy as jnp
+
+        from repro.netsim.fluid_jax import _slice_step
+
+        rng = np.random.default_rng(0)
+        n = TINY.num_racks
+        own = rng.uniform(0, 5.0, (n, n))
+        np.fill_diagonal(own, 0.0)
+        relay = rng.uniform(0, 2.0, (n, n))
+        np.fill_diagonal(relay, 0.0)
+        adj = topo.matching_tensor()[2].astype(np.float64)
+        o_np, r_np, delivered, moved = rotor_slice_step(
+            own.copy(), relay.copy(), adj, vlb=True
+        )
+        state = (jnp.asarray(own), jnp.asarray(relay),
+                 jnp.zeros(()), jnp.zeros(()))
+        (o_jx, r_jx, done, wire), _ = _slice_step(
+            state, jnp.asarray(adj), vlb=True
+        )
+        np.testing.assert_allclose(o_np, np.asarray(o_jx), atol=1e-5)
+        np.testing.assert_allclose(r_np, np.asarray(r_jx), atol=1e-5)
+        assert np.isclose(delivered, float(done), rtol=1e-6)
+        assert np.isclose(delivered + moved, float(wire), rtol=1e-6)
+
+
+class TestInvariants:
+    @pytest.mark.parametrize("vlb", [False, True])
+    def test_byte_conservation(self, topo, vlb):
+        d = _demands()["permutation"]
+        r = simulate_rotor_bulk_batch(TINY, d, vlb=vlb, max_cycles=50,
+                                      topo=topo)
+        # delivered + still-queued == offered, at scan end
+        end_done = r.finished_frac[0, -1] * r.total_bytes[0]
+        np.testing.assert_allclose(
+            end_done + r.residual_bytes[0], r.total_bytes[0], rtol=1e-5
+        )
+
+    def test_finished_frac_monotone_and_bounded(self, topo):
+        for name, d in _demands().items():
+            r = simulate_rotor_bulk_batch(TINY, d, vlb=True, max_cycles=100,
+                                          topo=topo)
+            f = r.finished_frac[0]
+            assert (np.diff(f) >= -1e-6).all(), name
+            assert f[-1] <= 1.0 + 1e-5, name
+
+    def test_bandwidth_tax_nonnegative_and_zero_without_vlb(self, topo):
+        for d in _demands().values():
+            direct = simulate_rotor_bulk_batch(TINY, d, vlb=False,
+                                               max_cycles=100, topo=topo)
+            with_vlb = simulate_rotor_bulk_batch(TINY, d, vlb=True,
+                                                 max_cycles=100, topo=topo)
+            assert abs(direct.bandwidth_tax[0]) < 1e-5   # one-hop only
+            assert with_vlb.bandwidth_tax[0] >= -1e-6
+
+    def test_vlb_helps_skew_and_costs_at_most_a_cycle(self, topo):
+        """Relaying may defer the last trickle by a relay-circuit wait
+        (bounded by one cycle) but must strictly speed skewed demand."""
+        for name, d in _demands().items():
+            a = simulate_rotor_bulk_batch(TINY, d, vlb=False, max_cycles=200,
+                                          topo=topo)
+            b = simulate_rotor_bulk_batch(TINY, d, vlb=True, max_cycles=200,
+                                          topo=topo)
+            assert b.slices_run[0] <= a.slices_run[0] + topo.num_slices, name
+            if name in ("permutation", "skew", "hotrack"):
+                assert b.slices_run[0] < a.slices_run[0], name
+
+
+class TestBatching:
+    def test_16_scenarios_single_vmapped_call(self, topo):
+        """The acceptance-bar batch: a (workload x load x seed) grid of 16
+        scenarios through one vmapped call, each row matching its
+        individually-simulated numpy oracle."""
+        base = _demands()
+        demands = np.stack(
+            [base[w] * s
+             for w in ("shuffle", "permutation", "skew", "hotrack")
+             for s in (0.5, 1.0, 2.0, 4.0)]
+        )
+        assert demands.shape[0] == 16
+        r = simulate_rotor_bulk_batch(TINY, demands, vlb=True,
+                                      max_cycles=150, topo=topo)
+        assert r.batch_size == 16
+        # spot-check rows against the oracle (full parity is TestParity)
+        for i in (0, 5, 10, 15):
+            o = simulate_rotor_bulk(TINY, demands[i], vlb=True,
+                                    max_cycles=150, topo=topo)
+            assert o.slices_run == int(r.slices_run[i])
+            assert np.isclose(o.throughput_gbps, r.throughput_gbps[i],
+                              rtol=1e-4)
+            assert np.isclose(o.fct_mean_ms, r.fct_mean_ms[i], rtol=1e-4)
+
+    def test_batch_rows_independent(self, topo):
+        """vmap must not couple scenarios: a row's result is identical
+        whether simulated alone or inside a batch."""
+        d = _demands()["skew"]
+        alone = simulate_rotor_bulk_batch(TINY, d, vlb=True, max_cycles=60,
+                                          topo=topo)
+        batch = simulate_rotor_bulk_batch(
+            TINY, np.stack([d * 3.0, d, d * 0.1]), vlb=True, max_cycles=60,
+            topo=topo,
+        )
+        np.testing.assert_allclose(
+            alone.finished_frac[0], batch.finished_frac[1], atol=1e-6
+        )
+
+
+class TestSweep:
+    def test_run_design_grid(self):
+        spec = SweepSpec(
+            designs=(DesignPoint(k=4, num_racks=8),),
+            workloads=("shuffle", "permutation"),
+            loads=(0.2, 0.5),
+            seeds=(0, 1),
+            max_cycles=60,
+        )
+        rows, res = run_design(spec, spec.designs[0])
+        assert len(rows) == 8 and res.batch_size == 8
+        for r in rows:
+            assert r["finished_frac"] >= 0.999
+            assert r["bandwidth_tax"] >= -1e-6
+            assert 0.0 < r["throughput_frac"] <= 1.0
+
+    def test_scenario_demand_offers_requested_load(self):
+        cfg = DesignPoint(k=4, num_racks=8).to_config()
+        from repro.core.schedule import cycle_timing
+
+        cyc_s = cycle_timing(cfg).cycle_ms * 1e-3
+        per_host = 0.3 * cfg.link_rate_gbps * 1e9 / 8 * cyc_s
+        for w in ("shuffle", "permutation"):
+            d = scenario_demand(w, cfg, 0.3, seed=0)
+            # every active rack offers ~ hosts_per_rack * per_host bytes
+            out = d.sum(1)
+            active = out[out > 0]
+            np.testing.assert_allclose(
+                active, cfg.hosts_per_rack * per_host, rtol=1e-6
+            )

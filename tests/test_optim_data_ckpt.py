@@ -2,10 +2,11 @@
 import os
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import SyntheticLM
 from repro.optim.adamw import (
@@ -53,12 +54,15 @@ class TestAdamW:
         assert float(new["w"].mean()) < 0.5
         np.testing.assert_allclose(new["ln"]["scale"], params["ln"]["scale"])
 
-    @settings(deadline=None, max_examples=20)
-    @given(st.integers(0, 20_000))
+    @pytest.mark.parametrize(
+        "step", [0, 1, 50, 99, 100, 101, 500, 5000, 9999, 10_000, 13_337,
+                 20_000]
+    )
     def test_lr_schedule_bounds(self, step):
         c = AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
         lr = float(lr_at(c, jnp.asarray(step)))
-        assert 0.0 < lr <= c.lr + 1e-12
+        # lr_at computes in float32: allow one ulp of representation slack
+        assert 0.0 < lr <= c.lr * (1 + 1e-6)
         if step >= c.total_steps:
             assert lr == pytest.approx(c.lr * c.min_lr_frac, rel=1e-3)
 
@@ -114,10 +118,7 @@ class TestCheckpoint:
         ck = Checkpointer(str(tmp_path))
         state = self._state()
         ck.save(7, state, blocking=True)
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
         shardings = jax.tree.map(
             lambda _: NamedSharding(mesh, P()), state
         )
@@ -134,8 +135,7 @@ class TestCheckpoint:
 
 
 class TestGlobalNorm:
-    @settings(deadline=None, max_examples=20)
-    @given(st.floats(0.1, 100.0))
+    @pytest.mark.parametrize("s", [0.1, 0.5, 1.0, 2.0, 3.7, 25.0, 100.0])
     def test_scaling_property(self, s):
         t = {"a": jnp.ones((3,)), "b": jnp.full((2, 2), 2.0)}
         n1 = float(global_norm(t))

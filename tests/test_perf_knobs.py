@@ -1,6 +1,8 @@
 """The §Perf levers must preserve semantics: chunked CE == standard CE,
 bf16 normalize ~= fp32 normalize, layouts don't change the math."""
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -95,7 +97,7 @@ class TestLayouts:
                                    jnp.int32),
         }
         mesh = make_mesh((1, 1), ("data", "model"))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             t1, _ = loss_fn(params, batch, cfg, pctx_for_mesh(mesh))
             t2, _ = loss_fn(params, batch, cfg,
                             pctx_for_mesh(mesh, layout="dp_only"))

@@ -1,5 +1,7 @@
 """Integration: training learns, checkpoint-restart is exact, serving runs."""
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -17,10 +19,7 @@ from repro.train.trainer import init_train_state, make_train_step
 
 
 def _mesh11():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def _tiny():
@@ -60,7 +59,7 @@ class TestTrainerLearns:
         from repro.launch.mesh import pctx_for_mesh
 
         pctx = pctx_for_mesh(mesh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             s1 = init_train_state(cfg, params)
             s1, m1 = jax.jit(make_train_step(cfg, pctx, opt))(s1, batch)
             s2 = init_opera_dp_state(params)
@@ -82,7 +81,7 @@ class TestTrainerLearns:
 
         pctx = pctx_for_mesh(mesh)
         src = SyntheticLM(cfg.vocab_size, 32, 8, seed=2)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             step = jax.jit(
                 make_opera_dp_train_step(cfg, pctx, opt, compress=True)
             )
