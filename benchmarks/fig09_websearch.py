@@ -1,23 +1,36 @@
-"""Fig. 9: Websearch (all-indirect worst case) — Opera admits ~10 %."""
+"""Fig. 9: Websearch (all-indirect worst case) — Opera admits ~10 %.
+
+The (network x load x seed) grid runs through the batched JAX flow
+engine in one vmapped device call; the capacity model supplies the
+analytic cross-check.
+"""
 from __future__ import annotations
 
 from benchmarks.common import banner, check, save
 from repro.netsim.capacity import summary_648
-from repro.netsim.flows import simulate
+from repro.netsim.flows_jax import simulate_grid
+from repro.netsim.sweep import summarize
+
+NETS = ("opera", "expander", "clos")
+SIM_KW = dict(num_hosts=216, horizon_s=0.6, tail_s=0.3)
 
 
-def run(loads=(0.01, 0.05, 0.10, 0.20, 0.25)) -> dict:
+def run(loads=(0.01, 0.05, 0.10, 0.20, 0.25), seeds=(2, 3)) -> dict:
     banner("Fig. 9 — Websearch workload (Opera pays tax on everything)")
+    rows = simulate_grid(NETS, ("websearch",), loads, seeds=seeds, **SIM_KW)
+    mean = summarize(
+        rows,
+        by=("network", "load"),
+        stats=("fct_p99_ms_small", "admitted", "finished_frac",
+               "backlog_frac"),
+    )
     out = {}
-    for net in ("opera", "expander", "clos"):
-        rows = []
-        for load in loads:
-            r = simulate(net, "websearch", load, horizon_s=0.8, seed=2)
-            rows.append(dict(load=load, small_p99_ms=r.fct_p99_ms_small,
-                             admitted=r.admitted, finished=r.finished_frac))
-            print(f"  {net:9s} load {load:4.2f}: small 99p "
-                  f"{r.fct_p99_ms_small:9.3f} ms  admitted={r.admitted}")
-        out[net] = rows
+    for net in NETS:
+        out[net] = [r for r in mean if r["network"] == net]
+        for r in out[net]:
+            print(f"  {net:9s} load {r['load']:4.2f}: small 99p "
+                  f"{r['fct_p99_ms_small']:9.3f} ms  "
+                  f"admitted={r['admitted']:.1f}")
 
     s = summary_648()
     print(f"  capacity model: opera {s['opera_latency_load']:.3f}, "
@@ -26,12 +39,14 @@ def run(loads=(0.01, 0.05, 0.10, 0.20, 0.25)) -> dict:
           f"(paper: 0.60), extra path tax = {100*s['extra_tax']:.0f}% "
           f"(paper: 41%)")
     ok1 = check("Opera admits ~10% (paper)",
-                out["opera"][2]["admitted"] and not out["opera"][3]["admitted"])
+                out["opera"][2]["admitted"] > 0.5
+                and out["opera"][3]["admitted"] < 0.5)
     ok2 = check("statics admit ~25% (paper: slightly above 25%)",
-                out["expander"][3]["admitted"])
+                out["expander"][3]["admitted"] > 0.5)
     ok3 = check("equivalent FCTs at low load across networks",
-                abs(out["opera"][0]["small_p99_ms"] -
-                    out["expander"][0]["small_p99_ms"]) < 5.0)
+                abs(out["opera"][0]["fct_p99_ms_small"] -
+                    out["expander"][0]["fct_p99_ms_small"]) < 5.0)
+    out["rows"] = rows
     out["capacity_model"] = s
     out["checks"] = dict(opera10=ok1, statics25=ok2, low_load_equal=ok3)
     return out

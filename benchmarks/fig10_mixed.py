@@ -1,16 +1,22 @@
 """Fig. 10: mixed Websearch(latency)+Shuffle(bulk) — aggregate throughput.
 
-Two views of the same figure:
+Three views of the same figure:
 
 * the calibrated analytic capacity model (netsim/capacity.py), which
   carries the paper's transport efficiencies and drives the checks;
-* a fluid *measurement* from the batched JAX engine: all Websearch-load
-  points simulated in ONE vmapped call, each scenario a saturating
-  shuffle on a fabric derated by the latency class's slot consumption
-  (x * avg_hops of the duty-cycled uplink slots).  The fluid engine has
-  ideal transport, so the measured bulk capacity should sit slightly
-  above the eta-calibrated model — a structural cross-check that the
-  model's slot accounting matches the simulated fabric.
+* a fluid *measurement* from the batched JAX bulk engine: all
+  Websearch-load points simulated in ONE vmapped call, each scenario a
+  saturating shuffle on a fabric derated by the latency class's slot
+  consumption (x * avg_hops of the duty-cycled uplink slots).  The
+  fluid engine has ideal transport, so the measured bulk capacity
+  should sit slightly above the eta-calibrated model;
+* a flow-level *measurement* from the batched JAX flow engine: each
+  scenario offers real Websearch flows at load x on the latency pool
+  plus saturating >=15 MB bulk flows on the slot-derated direct-circuit
+  pool (one vmapped call for all x), and the aggregate served
+  throughput is read off the remaining-bytes tensor at the horizon —
+  an end-to-end check that the processor-sharing engine reproduces the
+  same aggregate-capacity curve.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ from repro.netsim.capacity import (
     clos_capacity,
     latency_capacity,
 )
+from repro.netsim.flows import build_mixed_scenario
+from repro.netsim.flows_jax import simulate_flows_batch
 from repro.netsim.fluid_jax import simulate_rotor_bulk_batch
 from repro.netsim.workloads import demand_all_to_all
 
@@ -62,6 +70,31 @@ def _cycle_bytes_per_host() -> float:
     return OPERA_648.link_rate_gbps * 1e9 / 8 * t.cycle_ms * 1e-3
 
 
+def _flow_measured_total(x_adms, num_hosts=216, horizon_s=0.5, seed=5) -> list:
+    """Aggregate served throughput (fraction of host bw) from the flow
+    engine: one vmapped call over every Websearch-load point, each a
+    mixed scenario with the bulk class offered 1.3x the slot-derated
+    direct capacity (saturating)."""
+    op = OPERA_648_PT
+    slots = op.duty * op.u / op.d
+    scns = [
+        build_mixed_scenario(
+            x,
+            bulk_load=1.3 * max(0.9 * (slots - x * op.avg_hops), 0.05),
+            num_hosts=num_hosts,
+            horizon_s=horizon_s,
+            seed=seed,
+        )
+        for x in x_adms
+    ]
+    batch = simulate_flows_batch(scns)
+    agg_Bps = num_hosts * scns[0].nic_Bps
+    return [
+        float((s.sizes.sum() - rem.sum()) / horizon_s / agg_Bps)
+        for s, rem in zip(scns, batch.remaining_bytes)
+    ]
+
+
 def run(ws_loads=(0.0, 0.02, 0.05, 0.08, 0.10)) -> dict:
     banner("Fig. 10 — aggregate throughput vs Websearch (latency) load")
     rows = []
@@ -69,7 +102,8 @@ def run(ws_loads=(0.0, 0.02, 0.05, 0.08, 0.10)) -> dict:
     lat_cap = latency_capacity(op)
     x_adms = [min(x, lat_cap) for x in ws_loads]
     measured = _measured_bulk_frac(x_adms)
-    for x, x_adm, meas in zip(ws_loads, x_adms, measured):
+    flow_total = _flow_measured_total(x_adms)
+    for x, x_adm, meas, ftot in zip(ws_loads, x_adms, measured, flow_total):
         # Opera: latency traffic at per-host load x occupies x*avg_hops
         # link-slots (the wire-byte tax); the remaining fabric slots carry
         # application-tagged shuffle over tax-free direct circuits.  The
@@ -83,11 +117,12 @@ def run(ws_loads=(0.0, 0.02, 0.05, 0.08, 0.10)) -> dict:
         clos_total = clos_capacity(3.0)
         rows.append(dict(ws_load=x, opera=opera_total, expander=exp_total,
                          clos=clos_total, opera_bulk_model=bulk,
-                         opera_bulk_fluid=meas,
+                         opera_bulk_fluid=meas, opera_total_flowsim=ftot,
                          gain=opera_total / max(exp_total, clos_total)))
         print(f"  ws={x:4.2f}: opera {opera_total:.3f}  expander {exp_total:.3f}"
               f"  clos {clos_total:.3f}  -> {rows[-1]['gain']:.2f}x"
-              f"   [bulk: model {bulk:.3f} | fluid {meas:.3f}]")
+              f"   [bulk: model {bulk:.3f} | fluid {meas:.3f}]"
+              f"   [total: model {opera_total:.3f} | flowsim {ftot:.3f}]")
     ok1 = check("~2-4x aggregate throughput at low latency load (paper 4x)",
                 rows[0]["gain"] >= 2.0, f"{rows[0]['gain']:.2f}x")
     ok2 = check("~2x at 10% Websearch load (paper ~2x)",
@@ -102,7 +137,14 @@ def run(ws_loads=(0.0, 0.02, 0.05, 0.08, 0.10)) -> dict:
         all(0.8 <= q <= 1.4 for q in ratios),
         f"ratios={[f'{q:.2f}' for q in ratios]}",
     )
-    return dict(rows=rows, checks=dict(low=ok1, ten_pct=ok2, fluid=ok3))
+    fratios = [r["opera_total_flowsim"] / r["opera"] for r in rows]
+    ok4 = check(
+        "flow-engine aggregate throughput tracks the model (0.75-1.25x)",
+        all(0.75 <= q <= 1.25 for q in fratios),
+        f"ratios={[f'{q:.2f}' for q in fratios]}",
+    )
+    return dict(rows=rows,
+                checks=dict(low=ok1, ten_pct=ok2, fluid=ok3, flowsim=ok4))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + architecture/netsim smoke.
+# Run from the repo root:  bash scripts/ci_tier1.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+
+python -m pytest -x -q
+python scripts/smoke_all.py
+echo "CI TIER-1 GREEN"

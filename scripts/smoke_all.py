@@ -85,3 +85,23 @@ assert all(r["bandwidth_tax"] >= -1e-6 for r in rows), rows
 print(f"ok netsim sweep: {len(rows)} scenarios, "
       f"fct99={rows[0]['fct_99_ms']:.2f} ms")
 print("SWEEP SMOKE PASSED")
+
+# flow-level engine: tiny (network x load) grid in one vmapped scan
+from repro.netsim.flows_jax import simulate_grid
+
+frows = simulate_grid(
+    ("opera", "expander"),
+    ("websearch",),
+    (0.05,),
+    seeds=(0,),
+    num_hosts=16,
+    horizon_s=0.1,
+    dt_s=5e-4,
+    tail_s=0.05,
+)
+assert len(frows) == 2, frows
+assert all(np.isfinite(r["backlog_frac"]) for r in frows), frows
+assert all(0.0 <= r["finished_frac"] <= 1.0 for r in frows), frows
+print(f"ok flow engine: {len(frows)} scenarios, "
+      f"finished={frows[0]['finished_frac']:.3f}")
+print("FLOW SMOKE PASSED")

@@ -14,11 +14,20 @@ per-class capacity pools:
 This is the level of abstraction at which the paper's saturation loads
 and FCT-vs-load trends are determined; packet/transport micro-behavior
 is folded into the calibrated pool capacities (netsim/capacity.py).
+
+This module is the *numpy oracle*: `build_scenario` freezes a scenario's
+arrivals/sizes/pools into a `FlowScenario`, `_oracle_steps` runs the
+fixed-dt processor-sharing recurrence on it, and `finalize` turns raw
+completion steps into a `FlowSimResult`.  The batched JAX engine
+(`netsim/flows_jax.py`) consumes the *same* `FlowScenario` and
+`finalize`, and its `_flow_step` mirrors `_oracle_steps`'s per-step math
+exactly — change the two together (lockstep-tested by
+tests/test_flows_jax.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,6 +35,7 @@ from repro.netsim import capacity as C
 from repro.netsim.workloads import mean_flow_size, sample_flow_sizes
 
 BULK_CUTOFF = 15e6
+NETWORKS = ("opera", "expander", "clos", "rotornet")
 
 
 @dataclasses.dataclass
@@ -40,7 +50,66 @@ class FlowSimResult:
     backlog_frac: float = 0.0    # unserved fraction at end of arrivals
 
 
-def simulate(
+@dataclasses.dataclass
+class FlowScenario:
+    """One frozen (network, workload, load, seed) draw: everything the
+    fixed-dt recurrence needs, with times pre-discretized to step
+    indices so the numpy oracle and the JAX engine see bit-identical
+    activation schedules."""
+
+    network: str
+    workload: str
+    load: float
+    seed: int
+    horizon_s: float
+    dt_s: float
+    tail_s: float
+    num_hosts: int
+    link_gbps: float
+    arr: np.ndarray              # (n,) arrival time [s]
+    sizes: np.ndarray            # (n,) flow size [bytes]
+    start_step: np.ndarray       # (n,) first step the flow is servable
+    is_bulk: np.ndarray          # (n,) bool: bulk-pool class
+    lat_pool_Bps: float          # latency-class pool [bytes/s]
+    bulk_pool_Bps: float         # bulk-class pool [bytes/s]
+
+    @property
+    def num_flows(self) -> int:
+        return int(self.arr.size)
+
+    @property
+    def nic_Bps(self) -> float:
+        return self.link_gbps * 1e9 / 8.0
+
+    @property
+    def steps(self) -> int:
+        return int(self.horizon_s / self.dt_s) + int(self.tail_s / self.dt_s)
+
+    @property
+    def mid_step(self) -> int:
+        """First step at which t >= horizon/2 (backlog snapshot)."""
+        return int(np.ceil(self.horizon_s / 2 / self.dt_s))
+
+    @property
+    def end_step(self) -> int:
+        """First step at which t >= horizon (backlog snapshot)."""
+        return int(np.ceil(self.horizon_s / self.dt_s))
+
+    def arrived_mask(self, step: int) -> np.ndarray:
+        return self.arr <= step * self.dt_s
+
+    def deficit_allowance(self, step: int) -> np.ndarray:
+        """Per-flow remaining bytes a *dedicated NIC* would still have at
+        `step`: sizes - nic * time-since-start (clipped).  Backlog above
+        this floor is a genuine service deficit; backlog below it is
+        just bytes no network could have moved yet (e.g. a 1 GB flow
+        that arrived moments before the snapshot), which must not count
+        against admission."""
+        elapsed_s = np.maximum(step - self.start_step, 0) * self.dt_s
+        return self.sizes - np.minimum(self.sizes, self.nic_Bps * elapsed_s)
+
+
+def build_scenario(
     network: str,                 # opera | expander | clos | rotornet
     workload: str,                # datamining | websearch | hadoop
     load: float,
@@ -51,7 +120,8 @@ def simulate(
     base_rtt_us: float = 20.0,
     cycle_ms: float = 10.7,
     seed: int = 0,
-) -> FlowSimResult:
+    tail_s: float = 0.5,
+) -> FlowScenario:
     rng = np.random.default_rng(seed)
     agg_bps = num_hosts * link_gbps * 1e9
     mean_sz = mean_flow_size(workload)
@@ -89,82 +159,282 @@ def simulate(
     else:
         raise ValueError(network)
 
-    nic_bps = link_gbps * 1e9 / 8.0
-    remaining = sizes.copy()
-    start = arr + start_delay
-    done_t = np.full(n, np.inf)
-    t = 0.0
-    rem_mid = rem_end = None
-    arrived_mid = arrived_end = 0.0
-    steps = int(horizon_s / dt_s) + int(0.5 / dt_s)
-    for step in range(steps):
-        t = step * dt_s
-        active = (start <= t) & (remaining > 0)
-        if rem_mid is None and t >= horizon_s / 2:
-            mask = arr <= t
-            rem_mid = float(remaining[mask].sum())
-            arrived_mid = float(sizes[mask].sum())
-        if rem_end is None and t >= horizon_s:
-            mask = arr <= t
-            rem_end = float(remaining[mask].sum())
-            arrived_end = float(sizes[mask].sum())
-        if not active.any():
-            if t > arr[-1]:
-                break
-            continue
-        for pool_bps, mask in (
-            (lat_pool, active & ~is_bulk),
-            (bulk_pool, active & is_bulk),
+    return FlowScenario(
+        network=network,
+        workload=workload,
+        load=load,
+        seed=seed,
+        horizon_s=horizon_s,
+        dt_s=dt_s,
+        tail_s=tail_s,
+        num_hosts=num_hosts,
+        link_gbps=link_gbps,
+        arr=arr,
+        sizes=sizes,
+        start_step=np.ceil((arr + start_delay) / dt_s).astype(np.int32),
+        is_bulk=is_bulk,
+        lat_pool_Bps=float(lat_pool),
+        bulk_pool_Bps=float(bulk_pool),
+    )
+
+
+def build_mixed_scenario(
+    ws_load: float,
+    bulk_load: float,
+    num_hosts: int = 648,
+    link_gbps: float = 10.0,
+    horizon_s: float = 1.0,
+    dt_s: float = 2e-4,
+    base_rtt_us: float = 20.0,
+    cycle_ms: float = 10.7,
+    bulk_flow_bytes: float = 64e6,
+    seed: int = 0,
+    tail_s: float = 0.0,
+) -> FlowScenario:
+    """Fig. 10's mixed offering on Opera pools: Websearch flows at
+    `ws_load` on the latency path plus fixed-size (>= cutoff) bulk flows
+    offering `bulk_load` of host bandwidth on the direct-circuit path.
+
+    The bulk pool only gets the fabric slots the latency class leaves:
+    admitted latency load x consumes x * avg_hops link-slots (the
+    wire-byte tax), exactly the accounting of fig10's analytic column —
+    so the flow-measured aggregate throughput is an end-to-end
+    cross-check of that model."""
+    rng = np.random.default_rng(seed)
+    agg_Bps = num_hosts * link_gbps * 1e9 / 8.0
+
+    n_ws = max(int(ws_load * agg_Bps / mean_flow_size("websearch") * horizon_s), 0)
+    arr_ws = np.sort(rng.uniform(0, horizon_s, n_ws))
+    sz_ws = sample_flow_sizes("websearch", n_ws, rng)
+
+    n_bk = max(int(bulk_load * agg_Bps / bulk_flow_bytes * horizon_s), 1)
+    arr_bk = np.sort(rng.uniform(0, horizon_s, n_bk))
+    sz_bk = np.full(n_bk, bulk_flow_bytes)
+
+    arr = np.concatenate([arr_ws, arr_bk])
+    sizes = np.concatenate([sz_ws, sz_bk])
+    is_bulk = np.concatenate([np.zeros(n_ws, bool), np.ones(n_bk, bool)])
+    delay = np.concatenate(
+        [np.full(n_ws, base_rtt_us * 1e-6),
+         rng.uniform(0, cycle_ms / 1e3, n_bk)]
+    )
+    op = C.OPERA_648_PT
+    ws_adm = min(ws_load, C.latency_capacity(op))
+    slots = op.duty * op.u / op.d
+    bulk_frac = max(C.ETA_DIRECT * (slots - ws_adm * op.avg_hops), 0.0)
+    return FlowScenario(
+        network="opera",
+        workload="mixed-ws-bulk",
+        load=ws_load + bulk_load,
+        seed=seed,
+        horizon_s=horizon_s,
+        dt_s=dt_s,
+        tail_s=tail_s,
+        num_hosts=num_hosts,
+        link_gbps=link_gbps,
+        arr=arr,
+        sizes=sizes,
+        start_step=np.ceil((arr + delay) / dt_s).astype(np.int32),
+        is_bulk=is_bulk,
+        lat_pool_Bps=float(C.latency_capacity(op) * agg_Bps),
+        bulk_pool_Bps=float(bulk_frac * agg_Bps),
+    )
+
+
+def _oracle_steps(
+    scn: FlowScenario, trace: bool = False
+) -> Tuple[np.ndarray, np.ndarray, float, float, Optional[np.ndarray]]:
+    """The fixed-dt processor-sharing recurrence, numpy float64.
+
+    Returns (done_step, remaining, deficit_mid, deficit_end, trace)
+    where done_step[i] is the step index at whose END flow i finished
+    (-1 if unfinished) and deficit_mid/deficit_end are the NIC-bound
+    service deficits (see `FlowScenario.deficit_allowance`) at the
+    half-horizon / horizon snapshots.  `flows_jax._flow_step` implements
+    identical per-step math in jnp — change the two together."""
+    n = scn.num_flows
+    nic = scn.nic_Bps
+    remaining = scn.sizes.astype(np.float64).copy()
+    done_step = np.full(n, -1, np.int64)
+    allow_mid = scn.deficit_allowance(scn.mid_step)
+    allow_end = scn.deficit_allowance(scn.end_step)
+    rem_mid = rem_end = 0.0
+    last_start = int(scn.start_step.max()) if n else 0
+    traces: List[np.ndarray] = []
+    for step in range(scn.steps):
+        active = (step >= scn.start_step) & (remaining > 0)
+        if step == scn.mid_step:
+            rem_mid = float(np.maximum(remaining - allow_mid, 0.0).sum())
+        if step == scn.end_step:
+            rem_end = float(np.maximum(remaining - allow_end, 0.0).sum())
+        if not trace and not active.any() and step > last_start \
+                and step > scn.end_step:
+            break
+        for pool_Bps, mask in (
+            (scn.lat_pool_Bps, active & ~scn.is_bulk),
+            (scn.bulk_pool_Bps, active & scn.is_bulk),
         ):
             k = int(mask.sum())
-            if k == 0 or pool_bps <= 0:
+            if k == 0 or pool_Bps <= 0:
                 continue
-            share = min(pool_bps / k, nic_bps) * dt_s
-            served = np.minimum(remaining[mask], share)
-            remaining[mask] -= served
-            newly = mask & (remaining <= 0) & np.isinf(done_t)
-            done_t[newly] = t + dt_s
+            share = min(pool_Bps / k, nic) * scn.dt_s
+            remaining[mask] -= np.minimum(remaining[mask], share)
+            newly = mask & (remaining <= 0) & (done_step < 0)
+            done_step[newly] = step + 1
+        if trace:
+            traces.append(remaining.copy())   # post-step, like the scan's ys
+    return done_step, remaining, rem_mid, rem_end, (
+        np.asarray(traces) if trace else None
+    )
 
-    fct = done_t - arr
-    ok = np.isfinite(fct)
-    finished = float(ok.mean())
 
-    def p99(sel):
-        s = sel & ok
-        if s.sum() < 5:
-            return float("inf") if (sel & ~ok).any() else float("nan")
-        return float(np.percentile(fct[s] * 1e3, 99))
+def percentile_fct(fct_ms: np.ndarray, sel: np.ndarray, ok: np.ndarray) -> float:
+    """99th-percentile FCT of the selected class, robust to small n.
 
+    - empty class (no flows sampled): 0.0 — a documented sentinel that
+      keeps benchmark JSON and `summarize` means finite;
+    - unfinished flows present and <5 finished: +inf (overload signal);
+    - otherwise: the finite empirical percentile over finished flows,
+      however few there are.
+    """
+    if not sel.any():
+        return 0.0
+    done = sel & ok
+    if done.sum() == 0:
+        return float("inf")
+    if (sel & ~ok).any() and done.sum() < 5:
+        return float("inf")
+    return float(np.percentile(fct_ms[done], 99))
+
+
+def finalize(
+    scn: FlowScenario,
+    done_step: np.ndarray,
+    rem_mid: float,
+    rem_end: float,
+) -> FlowSimResult:
+    """Raw completion steps -> FlowSimResult.  Shared verbatim by the
+    numpy oracle and the batched JAX engine."""
+    ok = done_step >= 0
+    fct_ms = np.where(ok, done_step * scn.dt_s - scn.arr, np.inf) * 1e3
+    sizes = scn.sizes
     small = sizes < 100e3
     mid = (sizes >= 100e3) & (sizes < BULK_CUTOFF)
     large = sizes >= BULK_CUTOFF
-    # stability: did the backlog grow over the second half of the arrival
-    # window?  stable systems hold backlog ~constant; overloaded ones grow
-    # it by (1 - capacity/load) of the newly offered work.
-    if rem_mid is None or rem_end is None:
-        growth = 0.0
-    else:
-        newly_offered = max(arrived_end - arrived_mid, 1.0)
-        growth = max(rem_end - rem_mid, 0.0) / newly_offered
+    # stability: did the NIC-bound service deficit grow over the second
+    # half of the arrival window?  stable systems hold it ~stationary;
+    # overloaded ones grow it by (1 - capacity/load) of the newly offered
+    # work.  (Raw backlog would flag heavy-tailed low loads: one 1 GB
+    # flow arriving just before the snapshot IS backlog, but no network
+    # could have served it yet.)
+    arrived_mid = float(sizes[scn.arrived_mask(scn.mid_step)].sum())
+    arrived_end = float(sizes[scn.arrived_mask(scn.end_step)].sum())
+    newly_offered = max(arrived_end - arrived_mid, 1.0)
+    growth = max(rem_end - rem_mid, 0.0) / newly_offered
     return FlowSimResult(
-        load=load,
-        fct_p99_ms_small=p99(small),
-        fct_p99_ms_mid=p99(mid),
-        fct_p99_ms_large=p99(large),
-        fct_mean_ms=float(np.mean(fct[ok]) * 1e3) if ok.any() else float("inf"),
+        load=scn.load,
+        fct_p99_ms_small=percentile_fct(fct_ms, small, ok),
+        fct_p99_ms_mid=percentile_fct(fct_ms, mid, ok),
+        fct_p99_ms_large=percentile_fct(fct_ms, large, ok),
+        fct_mean_ms=float(np.mean(fct_ms[ok])) if ok.any() else float("inf"),
         admitted=growth < 0.08,
-        finished_frac=finished,
+        finished_frac=float(ok.mean()),
         backlog_frac=growth,
     )
 
 
-def saturation_load(network: str, workload: str, **kw) -> float:
-    """Largest load on a coarse grid that the network still admits."""
-    last = 0.0
-    for load in (0.01, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.35, 0.40, 0.45):
-        r = simulate(network, workload, load, horizon_s=1.0, **kw)
-        if r.admitted:
-            last = load
-        else:
-            break
-    return last
+def simulate(
+    network: str,
+    workload: str,
+    load: float,
+    num_hosts: int = 648,
+    link_gbps: float = 10.0,
+    horizon_s: float = 2.0,
+    dt_s: float = 2e-4,
+    base_rtt_us: float = 20.0,
+    cycle_ms: float = 10.7,
+    seed: int = 0,
+    tail_s: float = 0.5,
+) -> FlowSimResult:
+    scn = build_scenario(
+        network, workload, load,
+        num_hosts=num_hosts, link_gbps=link_gbps, horizon_s=horizon_s,
+        dt_s=dt_s, base_rtt_us=base_rtt_us, cycle_ms=cycle_ms, seed=seed,
+        tail_s=tail_s,
+    )
+    done_step, _, rem_mid, rem_end, _ = _oracle_steps(scn)
+    return finalize(scn, done_step, rem_mid, rem_end)
+
+
+# ---------------- saturation knee --------------------------------------
+
+
+@dataclasses.dataclass
+class SaturationResult:
+    """Knee of the admission curve.  `beyond_grid` is True when the
+    network still admits the configured ceiling — the knee is a lower
+    bound, not a measurement (the old coarse grid silently clipped at
+    0.45 and made this case indistinguishable from a real knee)."""
+
+    load: float
+    beyond_grid: bool
+    ladder: List[Dict]
+
+    def __float__(self) -> float:
+        return self.load
+
+
+def saturation_load(
+    network: str,
+    workload: str,
+    ceiling: float = 0.60,
+    floor: float = 0.02,
+    coarse_points: int = 8,
+    refine_points: int = 5,
+    seeds: Sequence[int] = (0,),
+    use_jax: bool = True,
+    **kw,
+) -> SaturationResult:
+    """Admission knee by batched bisection up to a configurable ceiling.
+
+    Two rounds of load ladders (each a single vmapped device call when
+    `use_jax`): a coarse grid on [floor, ceiling], then a fine grid
+    inside the bracket where admission flips.  A load is admitted when
+    the majority of seeds admit it.
+    """
+    kw.setdefault("horizon_s", 1.0)
+
+    if use_jax:
+        from repro.netsim.flows_jax import saturation_ladder
+    else:
+        def saturation_ladder(network, workload, loads, seeds=(0,), **kw2):
+            rows = []
+            for load in loads:
+                adm = [
+                    simulate(network, workload, load, seed=s, **kw2).admitted
+                    for s in seeds
+                ]
+                rows.append(dict(load=float(load),
+                                 admitted_frac=float(np.mean(adm))))
+            return rows
+
+    def knee(loads: np.ndarray) -> Tuple[float, Optional[float], List[Dict]]:
+        rows = saturation_ladder(network, workload, loads, seeds=seeds, **kw)
+        last_ok, first_bad = 0.0, None
+        for r in rows:
+            if r["admitted_frac"] > 0.5:
+                last_ok = r["load"]
+            elif first_bad is None:
+                first_bad = r["load"]
+        return last_ok, first_bad, rows
+
+    coarse = np.linspace(floor, ceiling, coarse_points)
+    last_ok, first_bad, ladder = knee(coarse)
+    if first_bad is None:
+        return SaturationResult(load=ceiling, beyond_grid=True, ladder=ladder)
+    if refine_points > 0 and first_bad > last_ok and last_ok > 0.0:
+        fine = np.linspace(last_ok, first_bad, refine_points + 2)[1:-1]
+        fine_ok, _, fine_rows = knee(fine)
+        ladder = sorted(ladder + fine_rows, key=lambda r: r["load"])
+        last_ok = max(last_ok, fine_ok)
+    return SaturationResult(load=last_ok, beyond_grid=False, ladder=ladder)

@@ -1,0 +1,245 @@
+"""Batched JAX flow-level engine (Figs. 7, 9, 10).
+
+Re-expresses `flows.simulate`'s fixed-dt processor-sharing recurrence as
+a jitted `lax.scan` over time steps, with flow state held as dense
+tensors — remaining bytes, completion step, class mask, activation step
+— and `jax.vmap` over a leading scenario axis: the
+(network x workload x load x seed) grids the paper's FCT-vs-load and
+saturation figures sweep.  One compiled call simulates the whole grid;
+the per-step math is numerically identical to the numpy oracle
+(`flows._oracle_steps`) and the two are lockstep-tested by
+tests/test_flows_jax.py.  Mirrors the `fluid_jax.py` design for the
+bulk side.
+
+Internals: byte quantities are normalized to one NIC-step of service
+(`nic_Bps * dt`) so float32 keeps ample mantissa headroom; activation
+times are pre-discretized to int32 step indices on the host (shared
+with the oracle via `flows.FlowScenario`), so there is no float time
+comparison on the device; the half-horizon/horizon service-deficit snapshots
+the stability classifier needs are gathered inside the scan at
+host-computed step indices against host-precomputed per-flow NIC-bound
+allowances (`FlowScenario.deficit_allowance`).  Scenarios with fewer flows than the batch
+maximum are padded with never-active flows (remaining = 0, start step
+beyond the scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim.flows import (
+    FlowScenario,
+    FlowSimResult,
+    build_scenario,
+    finalize,
+)
+
+
+def _flow_step(carry, step, scn_ops, trace: bool):
+    """One fixed-dt step, pure jnp — the scan body.
+
+    Mirrors `flows._oracle_steps` exactly (normalized units: every
+    flow's per-step NIC budget is 1.0); change the two together.
+    """
+    remaining, done_step, rem_mid, rem_end = carry
+    start, is_bulk, lat_u, bulk_u, allow_mid, allow_end, mid_step, end_step = scn_ops
+    active = (step >= start) & (remaining > 0)
+    rem_mid = jnp.where(
+        step == mid_step, jnp.maximum(remaining - allow_mid, 0.0).sum(), rem_mid
+    )
+    rem_end = jnp.where(
+        step == end_step, jnp.maximum(remaining - allow_end, 0.0).sum(), rem_end
+    )
+    for pool_u, mask in (
+        (lat_u, active & ~is_bulk),
+        (bulk_u, active & is_bulk),
+    ):
+        m = mask.astype(remaining.dtype)
+        k = m.sum()
+        share = jnp.minimum(pool_u / jnp.maximum(k, 1.0), 1.0)
+        share = jnp.where(pool_u > 0, share, 0.0)
+        remaining = remaining - jnp.minimum(remaining, share) * m
+        newly = mask & (remaining <= 0) & (done_step < 0)
+        done_step = jnp.where(newly, step + 1, done_step)
+    carry = (remaining, done_step, rem_mid, rem_end)
+    return carry, (remaining if trace else jnp.zeros((), remaining.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps", "trace"))
+def _run_batch(
+    remaining0, start_step, is_bulk, lat_u, bulk_u,
+    allow_mid, allow_end, mid_step, end_step, num_steps: int, trace: bool,
+):
+    """vmap(scan): batch -> time steps.  All operands carry a leading
+    scenario axis except the shared step count."""
+
+    def one_scenario(rem0, start, bulk_mask, lat, blk, amid, aend, mstep, estep):
+        scn_ops = (start, bulk_mask, lat, blk, amid, aend, mstep, estep)
+        carry0 = (
+            rem0,
+            jnp.full(rem0.shape, -1, jnp.int32),
+            jnp.zeros((), rem0.dtype),
+            jnp.zeros((), rem0.dtype),
+        )
+        steps = jnp.arange(num_steps, dtype=jnp.int32)
+        (remaining, done_step, rem_mid, rem_end), ys = jax.lax.scan(
+            lambda c, s: _flow_step(c, s, scn_ops, trace), carry0, steps
+        )
+        return remaining, done_step, rem_mid, rem_end, ys
+
+    return jax.vmap(one_scenario)(
+        remaining0, start_step, is_bulk, lat_u, bulk_u,
+        allow_mid, allow_end, mid_step, end_step,
+    )
+
+
+@dataclasses.dataclass
+class FlowBatchResult:
+    """Batched engine output: one `FlowSimResult` per scenario (computed
+    by the same `flows.finalize` the oracle uses), the per-flow
+    remaining bytes at scan end (fig10 integrates these into served
+    throughput), and — in trace mode, test-sized grids only — each
+    scenario's full (steps, n) remaining-bytes trajectory."""
+
+    results: List[FlowSimResult]
+    remaining_bytes: List[np.ndarray]       # (n_b,) per scenario
+    traces: Optional[List[np.ndarray]] = None
+
+
+def simulate_flows_batch(
+    scenarios: Sequence[FlowScenario],
+    dtype=jnp.float32,
+    trace: bool = False,
+) -> FlowBatchResult:
+    """Simulate a batch of flow scenarios in one vmapped call.
+
+    All scenarios must share dt/horizon/tail (one static step count per
+    compiled program); flow counts may differ — shorter rows are padded
+    with never-active flows.
+    """
+    if not scenarios:
+        return FlowBatchResult([], [])
+    steps = {s.steps for s in scenarios}
+    if len(steps) != 1:
+        raise ValueError(f"scenarios disagree on step count: {sorted(steps)}")
+    num_steps = steps.pop()
+    n_max = max(s.num_flows for s in scenarios)
+    B = len(scenarios)
+
+    remaining0 = np.zeros((B, n_max), np.float64)
+    start_step = np.full((B, n_max), num_steps + 1, np.int32)
+    is_bulk = np.zeros((B, n_max), bool)
+    allow_mid = np.zeros((B, n_max), np.float64)
+    allow_end = np.zeros((B, n_max), np.float64)
+    lat_u = np.zeros(B)
+    bulk_u = np.zeros(B)
+    mid_step = np.zeros(B, np.int32)
+    end_step = np.zeros(B, np.int32)
+    units = np.zeros(B)
+    for b, s in enumerate(scenarios):
+        n = s.num_flows
+        unit = s.nic_Bps * s.dt_s          # bytes one NIC serves per step
+        units[b] = unit
+        remaining0[b, :n] = s.sizes / unit
+        start_step[b, :n] = s.start_step
+        is_bulk[b, :n] = s.is_bulk
+        allow_mid[b, :n] = s.deficit_allowance(s.mid_step) / unit
+        allow_end[b, :n] = s.deficit_allowance(s.end_step) / unit
+        lat_u[b] = s.lat_pool_Bps / s.nic_Bps
+        bulk_u[b] = s.bulk_pool_Bps / s.nic_Bps
+        mid_step[b] = s.mid_step
+        end_step[b] = s.end_step
+
+    remaining, done_step, rem_mid, rem_end, ys = _run_batch(
+        jnp.asarray(remaining0, dtype),
+        jnp.asarray(start_step),
+        jnp.asarray(is_bulk),
+        jnp.asarray(lat_u, dtype),
+        jnp.asarray(bulk_u, dtype),
+        jnp.asarray(allow_mid, dtype),
+        jnp.asarray(allow_end, dtype),
+        jnp.asarray(mid_step),
+        jnp.asarray(end_step),
+        num_steps,
+        bool(trace),
+    )
+    done_step = np.asarray(done_step)
+    remaining = np.asarray(remaining, np.float64)
+    rem_mid = np.asarray(rem_mid, np.float64) * units
+    rem_end = np.asarray(rem_end, np.float64) * units
+
+    results = [
+        finalize(s, done_step[b, : s.num_flows], rem_mid[b], rem_end[b])
+        for b, s in enumerate(scenarios)
+    ]
+    remaining_bytes = [
+        remaining[b, : s.num_flows] * units[b]
+        for b, s in enumerate(scenarios)
+    ]
+    traces = None
+    if trace:
+        ys = np.asarray(ys, np.float64)    # (B, steps, n_max)
+        traces = [
+            ys[b, :, : s.num_flows] * units[b]
+            for b, s in enumerate(scenarios)
+        ]
+    return FlowBatchResult(results, remaining_bytes, traces)
+
+
+def simulate_grid(
+    networks: Sequence[str],
+    workloads: Sequence[str],
+    loads: Sequence[float],
+    seeds: Sequence[int] = (0,),
+    **kw,
+) -> List[Dict]:
+    """The full (network x workload x load x seed) grid in ONE vmapped
+    device call.  Returns one flat row per scenario: the grid coordinates
+    plus every `FlowSimResult` field — ready for `sweep.summarize`."""
+    grid = list(itertools.product(networks, workloads, loads, seeds))
+    scenarios = [
+        build_scenario(net, w, load, seed=seed, **kw)
+        for net, w, load, seed in grid
+    ]
+    batch = simulate_flows_batch(scenarios)
+    rows = []
+    for (net, w, load, seed), r in zip(grid, batch.results):
+        row = dict(network=net, workload=w, load=float(load), seed=int(seed))
+        row.update(
+            (f.name, getattr(r, f.name))
+            for f in r.__dataclass_fields__.values()
+        )
+        rows.append(row)
+    return rows
+
+
+def saturation_ladder(
+    network: str,
+    workload: str,
+    loads: Sequence[float],
+    seeds: Sequence[int] = (0,),
+    **kw,
+) -> List[Dict]:
+    """A full load ladder (loads x seeds) to the admission knee in one
+    device call; one row per load with the seed-majority admission
+    verdict.  `flows.saturation_load` stacks two of these into a
+    batched bisection."""
+    rows = simulate_grid([network], [workload], loads, seeds=seeds, **kw)
+    out = []
+    for load in loads:
+        mine = [r for r in rows if r["load"] == float(load)]
+        out.append(
+            dict(
+                load=float(load),
+                admitted_frac=float(np.mean([r["admitted"] for r in mine])),
+                backlog_frac=float(np.mean([r["backlog_frac"] for r in mine])),
+                finished_frac=float(np.mean([r["finished_frac"] for r in mine])),
+            )
+        )
+    return out

@@ -41,10 +41,14 @@ CDFS: Dict[str, List[Tuple[float, float]]] = {
 
 
 def sample_flow_sizes(name: str, n: int, rng: np.random.Generator) -> np.ndarray:
+    """Inverse-CDF sampler.  The distribution has an atom of mass p0 at
+    the first CDF point (P[S <= s0] = p0, conventionally all at s0) and
+    is log-linear between points; u is drawn on the full [0, 1) so the
+    atom carries exactly p0 of the samples."""
     cdf = CDFS[name]
     sizes = np.array([s for s, _ in cdf])
     probs = np.array([p for _, p in cdf])
-    u = rng.uniform(probs[0] * 1e-6, 1.0, n)
+    u = rng.uniform(0.0, 1.0, n)
     idx = np.searchsorted(probs, u)
     idx = np.clip(idx, 1, len(cdf) - 1)
     s0, s1 = sizes[idx - 1], sizes[idx]
@@ -53,23 +57,32 @@ def sample_flow_sizes(name: str, n: int, rng: np.random.Generator) -> np.ndarray
     return np.exp(np.log(s0) + frac * (np.log(s1) - np.log(s0)))
 
 
+def _byte_mass_below(cdf: List[Tuple[float, float]], cutoff: float) -> float:
+    """E[S * 1{S < cutoff}] in closed form.
+
+    Between points the CDF is linear in ln s, so the byte mass of a bin
+    (s0, s1] is  (p1 - p0) * (s1 - s0) / ln(s1 / s0)  — the integral of
+    s dF — truncated at the cutoff; the first point carries an atom of
+    p0 * s0 (matching the sampler's convention above)."""
+    s_first, p_first = cdf[0]
+    total = p_first * s_first if s_first < cutoff else 0.0
+    for (s0, p0), (s1, p1) in zip(cdf, cdf[1:]):
+        hi = min(cutoff, s1)
+        if hi <= s0:
+            break
+        total += (p1 - p0) * (hi - s0) / np.log(s1 / s0)
+    return total
+
+
 def mean_flow_size(name: str) -> float:
-    cdf = CDFS[name]
-    total = 0.0
-    prev_s, prev_p = cdf[0][0] * 0.5, 0.0
-    for s, p in cdf:
-        mid = np.sqrt(max(prev_s, 1.0) * s)  # log-mid of the bin
-        total += (p - prev_p) * mid
-        prev_s, prev_p = s, p
-    return float(total)
+    return float(_byte_mass_below(CDFS[name], np.inf))
 
 
 def byte_fraction_below(name: str, cutoff: float) -> float:
-    """Fraction of bytes carried by flows smaller than `cutoff`."""
-    rng = np.random.default_rng(0)
-    sizes = sample_flow_sizes(name, 400_000, rng)
-    total = sizes.sum()
-    return float(sizes[sizes < cutoff].sum() / total)
+    """Fraction of bytes carried by flows smaller than `cutoff` — exact
+    integral over the piecewise log-linear CDF (no Monte-Carlo)."""
+    cdf = CDFS[name]
+    return float(_byte_mass_below(cdf, cutoff) / _byte_mass_below(cdf, np.inf))
 
 
 # ---------------- spatial patterns (§5.2, §5.6) ----------------------------
@@ -113,8 +126,16 @@ def demand_permutation(num_racks: int, hosts_per_rack: int,
     """Host permutation: each host sends to one non-rack-local host."""
     rng = np.random.default_rng(seed)
     perm = rng.permutation(num_racks)
-    # fix any self-mapping by rotating
-    for i in np.nonzero(perm == np.arange(num_racks))[0]:
+    # Repair self-maps into a derangement.  Two or more fixed points are
+    # cycled among themselves (none can become fixed again: the indices
+    # are distinct).  A single fixed point i is swapped with its
+    # neighbour j — perm[j] == i is impossible (i is already taken by
+    # perm[i]), so the swap leaves neither position fixed.
+    fixed = np.flatnonzero(perm == np.arange(num_racks))
+    if fixed.size > 1:
+        perm[fixed] = np.roll(perm[fixed], 1)
+    elif fixed.size == 1:
+        i = int(fixed[0])
         j = (i + 1) % num_racks
         perm[i], perm[j] = perm[j], perm[i]
     d = np.zeros((num_racks, num_racks))

@@ -1,0 +1,194 @@
+"""Batched JAX flow engine: numpy-oracle lockstep + stability classification.
+
+The contract under test: `flows_jax._flow_step` implements *identical*
+per-step math to `flows._oracle_steps` (both consume the same
+`FlowScenario` and the same `flows.finalize`), so the two engines must
+agree per step on remaining bytes (float32 vs float64 is the only
+divergence) and on every emitted statistic; batching must not couple
+scenarios; and the admission classifier must produce the paper's
+saturation ordering on small grids.
+"""
+import numpy as np
+import pytest
+
+from repro.netsim import flows
+from repro.netsim.flows import (
+    build_mixed_scenario,
+    build_scenario,
+    finalize,
+    saturation_load,
+)
+from repro.netsim.flows_jax import (
+    saturation_ladder,
+    simulate_flows_batch,
+    simulate_grid,
+)
+
+# small enough that the full parity grid runs in seconds, large enough
+# that each scenario holds a few hundred flows
+TINY = dict(num_hosts=16, horizon_s=0.12, dt_s=5e-4, tail_s=0.1)
+
+
+def _scenarios():
+    return [
+        build_scenario(net, wl, load, seed=3, **TINY)
+        for net in ("opera", "expander", "clos", "rotornet")
+        for wl in ("datamining", "websearch")
+        for load in (0.05, 0.3)
+    ]
+
+
+class TestParity:
+    def test_per_step_remaining_lockstep(self):
+        """Every scenario's full remaining-bytes trajectory, numpy
+        oracle vs vmapped scan, at float32 tolerance."""
+        scns = _scenarios()
+        batch = simulate_flows_batch(scns, trace=True)
+        for s, tr in zip(scns, batch.traces):
+            _, _, _, _, oracle_tr = flows._oracle_steps(s, trace=True)
+            assert oracle_tr.shape == tr.shape
+            np.testing.assert_allclose(
+                tr, oracle_tr, atol=s.sizes.max() * 1e-5,
+                err_msg=f"{s.network}/{s.workload}/{s.load}",
+            )
+
+    def test_results_match_oracle(self):
+        scns = _scenarios()
+        batch = simulate_flows_batch(scns)
+        for s, r in zip(scns, batch.results):
+            done, _, rem_mid, rem_end, _ = flows._oracle_steps(s)
+            o = finalize(s, done, rem_mid, rem_end)
+            assert o.admitted == r.admitted, (s.network, s.workload, s.load)
+            assert np.isclose(o.finished_frac, r.finished_frac, atol=1e-6)
+            assert np.isclose(o.backlog_frac, r.backlog_frac, atol=1e-4)
+            for f in ("fct_p99_ms_small", "fct_p99_ms_mid",
+                      "fct_p99_ms_large", "fct_mean_ms"):
+                a, b = getattr(o, f), getattr(r, f)
+                if np.isfinite(a) or np.isfinite(b):
+                    assert np.isclose(a, b, rtol=1e-3, atol=1e-3), \
+                        (s.network, s.workload, s.load, f, a, b)
+
+    def test_simulate_equals_batch_of_one(self):
+        """The public single-scenario API is the oracle; a batch of one
+        must reproduce it."""
+        scn = build_scenario("opera", "datamining", 0.2, seed=7, **TINY)
+        via_oracle = flows.simulate("opera", "datamining", 0.2, seed=7, **TINY)
+        r = simulate_flows_batch([scn]).results[0]
+        assert via_oracle.admitted == r.admitted
+        assert np.isclose(via_oracle.fct_mean_ms, r.fct_mean_ms,
+                          rtol=1e-3, atol=1e-3)
+
+    def test_mixed_scenario_parity(self):
+        scn = build_mixed_scenario(
+            0.05, bulk_load=0.5, num_hosts=16, horizon_s=0.1, seed=1
+        )
+        done, rem, rem_mid, rem_end, _ = flows._oracle_steps(scn)
+        o = finalize(scn, done, rem_mid, rem_end)
+        batch = simulate_flows_batch([scn])
+        r = batch.results[0]
+        assert np.isclose(o.finished_frac, r.finished_frac, atol=1e-6)
+        np.testing.assert_allclose(
+            batch.remaining_bytes[0], rem, atol=scn.sizes.max() * 1e-5
+        )
+
+
+class TestBatching:
+    def test_batch_rows_independent(self):
+        """vmap must not couple scenarios: a row's result is identical
+        whether simulated alone or inside a mixed-size batch."""
+        a = build_scenario("opera", "websearch", 0.08, seed=5, **TINY)
+        b = build_scenario("expander", "datamining", 0.3, seed=6, **TINY)
+        c = build_scenario("clos", "websearch", 0.2, seed=7, **TINY)
+        alone = simulate_flows_batch([b]).results[0]
+        batch = simulate_flows_batch([a, b, c]).results[1]
+        assert alone.admitted == batch.admitted
+        assert alone.finished_frac == batch.finished_frac
+        for f in ("fct_p99_ms_small", "fct_p99_ms_mid", "fct_p99_ms_large",
+                  "fct_mean_ms", "backlog_frac"):
+            a_, b_ = getattr(alone, f), getattr(batch, f)
+            assert np.isclose(a_, b_, rtol=1e-5, atol=1e-6) or (
+                not np.isfinite(a_) and not np.isfinite(b_)
+            ), (f, a_, b_)
+
+    def test_grid_runs_full_cartesian_product(self):
+        rows = simulate_grid(
+            ("opera", "expander"), ("websearch",), (0.05, 0.2),
+            seeds=(0, 1), **TINY
+        )
+        assert len(rows) == 8
+        keys = {(r["network"], r["load"], r["seed"]) for r in rows}
+        assert len(keys) == 8
+        for r in rows:
+            assert 0.0 <= r["finished_frac"] <= 1.0
+            assert np.isfinite(r["backlog_frac"])
+
+    def test_mismatched_step_counts_rejected(self):
+        a = build_scenario("opera", "websearch", 0.1, **TINY)
+        bad = dict(TINY, horizon_s=0.2)
+        b = build_scenario("opera", "websearch", 0.1, **bad)
+        with pytest.raises(ValueError, match="step count"):
+            simulate_flows_batch([a, b])
+
+
+class TestStabilityClassification:
+    """The admission verdicts that set the paper's saturation loads."""
+
+    KW = dict(num_hosts=64, horizon_s=0.5, dt_s=5e-4, tail_s=0.25)
+
+    def test_websearch_knee_ordering(self):
+        """Opera saturates near 10% on all-indirect Websearch; the
+        expander keeps admitting well past that (paper: ~25%)."""
+        rows = simulate_grid(
+            ("opera", "expander"), ("websearch",), (0.05, 0.2),
+            seeds=(0, 1), **self.KW
+        )
+        verdict = {
+            (r["network"], r["load"]): r["admitted"] for r in rows
+            if r["seed"] == 0
+        }
+        assert verdict[("opera", 0.05)]
+        assert not verdict[("opera", 0.2)]
+        assert verdict[("expander", 0.2)]
+
+    def test_low_load_admitted_despite_heavy_tail(self):
+        """A 100 MB+ flow arriving just before the snapshot is backlog
+        no network could have served — it must not flip the verdict
+        (the raw-backlog classifier used to fail this)."""
+        rows = simulate_grid(
+            ("opera",), ("datamining",), (0.02,), seeds=(0, 1, 2, 3),
+            **self.KW
+        )
+        assert all(r["admitted"] for r in rows)
+
+    def test_saturation_ladder_single_call(self):
+        ladder = saturation_ladder(
+            "opera", "websearch", (0.04, 0.08, 0.25), seeds=(0, 1),
+            **self.KW
+        )
+        assert [r["load"] for r in ladder] == [0.04, 0.08, 0.25]
+        assert ladder[0]["admitted_frac"] > 0.5
+        assert ladder[-1]["admitted_frac"] < 0.5
+
+    def test_saturation_load_bisection_and_ceiling(self):
+        r = saturation_load(
+            "opera", "websearch", ceiling=0.3, coarse_points=5,
+            refine_points=3, **self.KW
+        )
+        assert not r.beyond_grid
+        assert 0.04 <= r.load <= 0.2          # paper: ~10 %
+        assert len(r.ladder) >= 5
+        # a ceiling below the knee must be flagged, not silently clipped
+        r2 = saturation_load(
+            "opera", "websearch", ceiling=0.05, coarse_points=3,
+            refine_points=0, **self.KW
+        )
+        assert r2.beyond_grid and r2.load == 0.05
+
+    def test_saturation_load_numpy_fallback_agrees(self):
+        kw = dict(self.KW, use_jax=False)
+        a = saturation_load("opera", "websearch", ceiling=0.3,
+                            coarse_points=5, refine_points=0, **kw)
+        b = saturation_load("opera", "websearch", ceiling=0.3,
+                            coarse_points=5, refine_points=0,
+                            **dict(self.KW, use_jax=True))
+        assert a.load == b.load

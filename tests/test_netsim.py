@@ -9,7 +9,7 @@ from repro.netsim.capacity import (
     crossover_alpha,
     summary_648,
 )
-from repro.netsim.flows import simulate
+from repro.netsim.flows import percentile_fct, simulate
 from repro.netsim.fluid import (
     simulate_clos_bulk,
     simulate_expander_bulk,
@@ -21,6 +21,7 @@ from repro.netsim.workloads import (
     demand_hotrack,
     demand_permutation,
     demand_skew,
+    mean_flow_size,
     sample_flow_sizes,
 )
 
@@ -46,6 +47,87 @@ class TestWorkloads:
         p = demand_permutation(8, 4, 10.0)
         assert (p.sum(1) > 0).all() and np.diag(p).sum() == 0
         assert demand_skew(10, 4, 10.0, 0.2).sum() > 0
+
+
+class TestPermutationDerangement:
+    """Regression for the self-map repair: the old rotate-fix computed
+    the self-mapped indices once, so adjacent self-maps were swapped
+    twice and reverted to identity — placing intra-rack bytes on the
+    fabric diagonal."""
+
+    @pytest.mark.parametrize("num_racks", [3, 4, 5, 8, 16, 37])
+    def test_zero_diagonal_and_valid_permutation_many_seeds(self, num_racks):
+        for seed in range(300):
+            d = demand_permutation(num_racks, 4, 10.0, seed=seed)
+            assert np.diag(d).sum() == 0.0, seed
+            dests = d.argmax(1)
+            assert (d.sum(1) > 0).all(), seed
+            assert sorted(dests) == list(range(num_racks)), seed
+
+
+class TestByteFractionClosedForm:
+    """The Monte-Carlo integral was replaced by the exact integral over
+    the piecewise log-linear CDF; the (fixed) sampler must agree."""
+
+    @pytest.mark.parametrize("name", ["websearch", "datamining", "hadoop"])
+    def test_matches_sampler_monte_carlo(self, name):
+        rng = np.random.default_rng(0)
+        s = sample_flow_sizes(name, 300_000, rng)
+        for cutoff in (100e3, 1e6, 15e6):
+            mc = float(s[s < cutoff].sum() / s.sum())
+            assert abs(byte_fraction_below(name, cutoff) - mc) < 0.015
+
+    def test_monotone_and_bounded(self):
+        prev = 0.0
+        for cutoff in (50, 1e3, 1e6, 15e6, 1e9, 1e12):
+            f = byte_fraction_below("datamining", cutoff)
+            assert prev - 1e-12 <= f <= 1.0
+            prev = f
+        assert byte_fraction_below("datamining", 1e12) == 1.0
+        assert byte_fraction_below("datamining", 50) == 0.0
+
+    def test_sampler_mean_matches_closed_form(self):
+        rng = np.random.default_rng(1)
+        s = sample_flow_sizes("websearch", 400_000, rng)
+        assert abs(s.mean() / mean_flow_size("websearch") - 1.0) < 0.02
+
+    def test_sampler_atom_at_first_point(self):
+        # P[S = s_first] must equal the CDF's first probability
+        rng = np.random.default_rng(2)
+        s = sample_flow_sizes("websearch", 200_000, rng)
+        atom = float(np.isclose(s, 6e3, rtol=1e-9).mean())
+        assert abs(atom - 0.15) < 0.01
+
+
+class TestP99SmallClasses:
+    """`percentile_fct` small-n paths: no NaN may leak into benchmark
+    JSON or `summarize` means."""
+
+    def test_empty_class_sentinel(self):
+        sel = np.zeros(4, bool)
+        ok = np.ones(4, bool)
+        assert percentile_fct(np.ones(4), sel, ok) == 0.0
+
+    def test_few_finished_no_unfinished_is_finite(self):
+        fct = np.array([1.0, 2.0, 3.0, 100.0])
+        sel = np.array([True, True, False, False])
+        ok = np.ones(4, bool)
+        p = percentile_fct(fct, sel, ok)
+        assert np.isfinite(p) and 1.0 <= p <= 2.0
+
+    def test_unfinished_small_class_is_inf(self):
+        fct = np.array([1.0, np.inf, np.inf])
+        sel = np.ones(3, bool)
+        ok = np.array([True, False, False])
+        assert percentile_fct(fct, sel, ok) == float("inf")
+
+    def test_no_nan_in_simulated_result(self):
+        # tiny scenario: the >=15 MB class has <5 flows at this scale
+        r = simulate("opera", "websearch", 0.05, num_hosts=16,
+                     horizon_s=0.1, dt_s=5e-4, tail_s=0.1, seed=0)
+        for f in ("fct_p99_ms_small", "fct_p99_ms_mid", "fct_p99_ms_large",
+                  "fct_mean_ms", "backlog_frac"):
+            assert not np.isnan(getattr(r, f)), f
 
 
 class TestShuffleFig8:
