@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 gate: full test suite + architecture/netsim smoke.
+# Tier-1 gate: full test suite + architecture/netsim smoke + static analysis.
 # Run from the repo root:  bash scripts/ci_tier1.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -7,4 +7,7 @@ export PYTHONPATH=src
 
 python -m pytest -x -q
 python scripts/smoke_all.py
+# static analysis over the whole tree (invariants + AST + jaxpr rules);
+# fails on new violations and emits the machine-readable report.
+python -m repro.staticcheck --json results/staticcheck.json
 echo "CI TIER-1 GREEN"

@@ -105,3 +105,22 @@ assert all(0.0 <= r["finished_frac"] <= 1.0 for r in frows), frows
 print(f"ok flow engine: {len(frows)} scenarios, "
       f"finished={frows[0]['finished_frac']:.3f}")
 print("FLOW SMOKE PASSED")
+
+# static analysis: Opera invariants on a small App-B point, the whole-tree
+# AST policy rules, and the jaxpr engine rules (f64/callback/recompile)
+import os
+
+from repro.staticcheck.cli import run_ast, run_invariants, run_jaxpr
+from repro.staticcheck.findings import Report
+
+repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+report = Report()
+run_invariants(report, [(8, 16, 1)], gap_frac=0.3)
+run_ast(report, repo_root, None)
+run_jaxpr(report)
+os.makedirs(os.path.join(repo_root, "results"), exist_ok=True)
+report.to_json(os.path.join(repo_root, "results", "staticcheck.json"))
+assert report.ok, "\n".join(str(f) for f in report.findings)
+print(f"ok staticcheck: {len(report.checks_run)} checks, "
+      f"{len(report.findings)} findings")
+print("STATICCHECK SMOKE PASSED")

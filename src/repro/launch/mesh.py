@@ -5,10 +5,13 @@ touches jax device state.  Single pod: 16x16 = 256 chips (TPU v5e pod),
 axes (data, model).  Multi-pod: 2 pods x 256 = 512 chips, axes
 (pod, data, model); the `pod` axis is the rotor-scheduled inter-pod
 dimension (DESIGN.md §3.1).
+
+Generic mesh construction lives in ``repro.compat.make_mesh`` — import
+it from there (the SC-AST-SHADOW staticcheck rule rejects re-exports of
+the compat surface; this module used to carry a trivial `make_mesh`
+alias that shadowed it).
 """
 from __future__ import annotations
-
-from typing import Optional, Tuple
 
 import jax
 
@@ -21,16 +24,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _compat_make_mesh(shape, axes)
 
 
-def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
-    return _compat_make_mesh(shape, axes)
-
-
 def make_host_mesh(model: int = 1):
     """Tiny mesh over however many (fake or real) local devices exist —
     used by tests and the CPU examples, never by the dry-run."""
     n = len(jax.devices())
     data = n // model
-    return make_mesh((data, model), ("data", "model"))
+    return _compat_make_mesh((data, model), ("data", "model"))
 
 
 def pctx_for_mesh(mesh, **kw):

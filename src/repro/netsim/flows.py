@@ -22,7 +22,8 @@ completion steps into a `FlowSimResult`.  The batched JAX engine
 (`netsim/flows_jax.py`) consumes the *same* `FlowScenario` and
 `finalize`, and its `_flow_step` mirrors `_oracle_steps`'s per-step math
 exactly — change the two together (lockstep-tested by
-tests/test_flows_jax.py).
+tests/test_flows_jax.py; the SC-AST-LOCKSTEP staticcheck rule flags
+diffs touching one file without the other).
 """
 from __future__ import annotations
 

@@ -132,11 +132,13 @@ def simulate_flows_batch(
     n_max = max(s.num_flows for s in scenarios)
     B = len(scenarios)
 
-    remaining0 = np.zeros((B, n_max), np.float64)
+    # Host-side staging is float64 on purpose: oracle-shared quantities are
+    # normalized at full precision, then cast once at the device boundary.
+    remaining0 = np.zeros((B, n_max), np.float64)  # staticcheck: ok SC-AST-F64 (host staging)
     start_step = np.full((B, n_max), num_steps + 1, np.int32)
     is_bulk = np.zeros((B, n_max), bool)
-    allow_mid = np.zeros((B, n_max), np.float64)
-    allow_end = np.zeros((B, n_max), np.float64)
+    allow_mid = np.zeros((B, n_max), np.float64)   # staticcheck: ok SC-AST-F64 (host staging)
+    allow_end = np.zeros((B, n_max), np.float64)   # staticcheck: ok SC-AST-F64 (host staging)
     lat_u = np.zeros(B)
     bulk_u = np.zeros(B)
     mid_step = np.zeros(B, np.int32)
@@ -170,9 +172,11 @@ def simulate_flows_batch(
         bool(trace),
     )
     done_step = np.asarray(done_step)
-    remaining = np.asarray(remaining, np.float64)
-    rem_mid = np.asarray(rem_mid, np.float64) * units
-    rem_end = np.asarray(rem_end, np.float64) * units
+    # Device f32 results are de-normalized on the host at float64, matching
+    # the float64 oracle's finalize() inputs.
+    remaining = np.asarray(remaining, np.float64)  # staticcheck: ok SC-AST-F64 (host staging)
+    rem_mid = np.asarray(rem_mid, np.float64) * units  # staticcheck: ok SC-AST-F64 (host staging)
+    rem_end = np.asarray(rem_end, np.float64) * units  # staticcheck: ok SC-AST-F64 (host staging)
 
     results = [
         finalize(s, done_step[b, : s.num_flows], rem_mid[b], rem_end[b])
@@ -184,6 +188,7 @@ def simulate_flows_batch(
     ]
     traces = None
     if trace:
+        # staticcheck: ok SC-AST-F64 (host staging)
         ys = np.asarray(ys, np.float64)    # (B, steps, n_max)
         traces = [
             ys[b, :, : s.num_flows] * units[b]

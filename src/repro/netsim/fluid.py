@@ -10,8 +10,9 @@ This module is the **numpy reference oracle**.  The per-slice recurrence
 (`rotor_slice_step`) is a deterministic, fully-vectorized function of
 the dense slice adjacency exported by `OperaTopology.matching_tensor`;
 the batched jnp engine in `netsim/fluid_jax.py` implements *identical*
-math (lockstep-tested by tests/test_netsim_jax.py) and is the one the
-benchmark sweeps run on.  RotorLB's VLB spreading is modeled as a
+math (lockstep-tested by tests/test_netsim_jax.py; the SC-AST-LOCKSTEP
+staticcheck rule flags diffs touching one file without the other) and
+is the one the benchmark sweeps run on.  RotorLB's VLB spreading is modeled as a
 proportional fluid allocation: each rack offers its queued backlog to
 all live partners in proportion to their spare circuit room (rather
 than the earlier greedy top-4 heuristic), which is both closer to a

@@ -1,0 +1,84 @@
+"""Finding/report types shared by both static-analysis layers."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Sequence
+
+# Severities: an ``error`` fails the CLI / CI gate; a ``warning`` is
+# reported but does not flip the exit code.
+ERROR = "error"
+WARNING = "warning"
+
+_DIRECTIVE = re.compile(r"#\s*staticcheck:\s*ok\s+(?P<rules>[A-Z0-9,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                      # e.g. "SC-INV-COVER"
+    message: str
+    path: Optional[str] = None     # file (code rules) / artifact name (invariants)
+    line: Optional[int] = None
+    severity: str = ERROR
+
+    @property
+    def location(self) -> str:
+        if self.path is None:
+            return "<artifact>"
+        return f"{self.path}:{self.line}" if self.line else self.path
+
+    def __str__(self) -> str:
+        return f"{self.severity}: {self.rule} {self.location}: {self.message}"
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    checks_run: List[str] = dataclasses.field(default_factory=list)
+
+    def extend(self, findings: Sequence[Finding], check: str) -> None:
+        self.checks_run.append(check)
+        self.findings.extend(findings)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == ERROR]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def by_rule(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def to_dict(self) -> Dict:
+        return {
+            "ok": self.ok,
+            "checks_run": self.checks_run,
+            "num_findings": len(self.findings),
+            "num_errors": len(self.errors),
+            "by_rule": self.by_rule(),
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+        }
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+
+def allowed_lines(source: str, rule: str) -> set:
+    """Line numbers (1-based) where `rule` is allowlisted by a
+    ``# staticcheck: ok RULE (...)`` directive on that line or the line
+    directly above it."""
+    ok: set = set()
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _DIRECTIVE.search(text)
+        if m and rule in m.group("rules"):
+            ok.add(i)
+            ok.add(i + 1)
+    return ok

@@ -1,0 +1,240 @@
+"""Layer 1 — Opera artifact verifier (no simulation).
+
+Verifies, directly from the design-time artifacts, the four structural
+invariants the paper's correctness argument rests on (PAPER.md §3;
+the spectral framing follows Harsh et al., *Expander Datacenters*):
+
+SC-INV-MATCH   each slice of ``matching_tensor()`` is the union of the
+               slice's live matchings: every live matching is an
+               involutive permutation, no two live matchings share an
+               edge, and the exported adjacency is the exact symmetric
+               0/1 union with no self-maps (empty diagonal).
+SC-INV-COVER   the union over one full cycle covers every ordered
+               off-diagonal rack pair exactly ``u/groups - 1`` times
+               (each matching is installed for u/groups slices, one of
+               them dark) — the single-hop all-to-all bulk guarantee.
+SC-INV-EXPAND  every slice graph is connected, and — when its minimum
+               live degree is >= 3 — its degree-normalized spectral gap
+               is at least ``gap_frac * ramanujan_bound(min_degree)``.
+               Degree-<3 slices are structurally cycles/matchings
+               (bipartite, gap 0) and are held to connectivity only.
+SC-INV-RECONF  consecutive slices (cyclically) differ in at most
+               ``2 * groups * N`` directed links — only the
+               reconfiguring switch groups' matchings may change, the
+               rest of the fabric stays up (piecewise reconfiguration).
+SC-INV-FABRIC  the static comparison fabrics (`expander_union`,
+               `random_regular_expander`) are symmetric, self-map-free,
+               connected, and meet the same spectral bound.
+
+All checks return ``Finding`` lists; ``verify_topology`` bundles the
+four topology rules.  Tests inject corrupted tensors via the
+``tensor=`` override to prove each rule actually fires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.expander import ramanujan_bound, spectral_gap
+from repro.core.topology import OperaTopology, _connected
+from repro.staticcheck.findings import Finding
+
+
+@dataclasses.dataclass(frozen=True)
+class InvariantConfig:
+    """Bounds for the expander check (documented in ROADMAP.md).
+
+    `gap_frac` is the required fraction of the Ramanujan-optimal gap at
+    the slice's *minimum* live degree; 0.3 is comfortably below what
+    random matching unions achieve at the Appendix-B design points
+    (measured: 0.77x at k12-n108-g1, 0.50x at k12-n108-g2) while still
+    rejecting near-bipartite and poorly-mixed slices.
+    """
+
+    gap_frac: float = 0.3
+    min_degree_for_gap: int = 3
+    max_slices: Optional[int] = None   # cap slices checked (None = all)
+
+
+def _slices(topo: OperaTopology, cfg: InvariantConfig) -> range:
+    n = topo.num_slices
+    if cfg.max_slices is not None:
+        n = min(n, cfg.max_slices)
+    return range(n)
+
+
+def _tensor(topo: OperaTopology, tensor: Optional[np.ndarray]) -> np.ndarray:
+    return topo.matching_tensor() if tensor is None else np.asarray(tensor)
+
+
+def check_matching_union(
+    topo: OperaTopology,
+    tensor: Optional[np.ndarray] = None,
+    config: InvariantConfig = InvariantConfig(),
+) -> List[Finding]:
+    """SC-INV-MATCH: slices are disjoint unions of involutive matchings."""
+    out: List[Finding] = []
+    ten = _tensor(topo, tensor)
+    n = topo.num_racks
+    ident = np.arange(n)
+
+    def bad(msg: str) -> None:
+        out.append(Finding("SC-INV-MATCH", msg, path=f"slice-tensor[{topo.num_racks}r]"))
+
+    if ten.shape != (topo.num_slices, n, n):
+        bad(f"tensor shape {ten.shape} != {(topo.num_slices, n, n)}")
+        return out
+    for t in _slices(topo, config):
+        union = np.zeros((n, n), dtype=np.int64)
+        for s, p in topo.live_matchings(t):
+            if not np.array_equal(p[p], ident):
+                bad(f"slice {t}: switch {s} matching is not an involution")
+                continue
+            mask = p != ident
+            union[ident[mask], p[mask]] += 1
+        if (union > 1).any():
+            bad(f"slice {t}: live matchings overlap (shared edge)")
+        sl = ten[t]
+        if not np.isin(sl, (0.0, 1.0)).all():
+            bad(f"slice {t}: adjacency entries outside {{0, 1}}")
+        if np.diagonal(sl).any():
+            bad(f"slice {t}: self-map (non-empty diagonal)")
+        if not np.array_equal(sl, sl.T):
+            bad(f"slice {t}: adjacency not symmetric")
+        if not np.array_equal(sl != 0, union >= 1):
+            bad(f"slice {t}: adjacency != union of live matchings")
+    return out
+
+
+def check_cycle_coverage(
+    topo: OperaTopology,
+    tensor: Optional[np.ndarray] = None,
+    config: InvariantConfig = InvariantConfig(),
+) -> List[Finding]:
+    """SC-INV-COVER: exact single-hop all-to-all coverage per cycle."""
+    out: List[Finding] = []
+    ten = _tensor(topo, tensor)
+    n = topo.num_racks
+    rounds = topo.num_switches // topo.groups
+    expected = rounds - 1
+    if expected <= 0:
+        return [Finding("SC-INV-COVER",
+                        f"degenerate schedule: u={topo.num_switches} groups="
+                        f"{topo.groups} leaves no live slices per matching",
+                        path="schedule")]
+    cover = (ten != 0).sum(axis=0)
+    off = ~np.eye(n, dtype=bool)
+    never = int((cover[off] == 0).sum())
+    if never:
+        out.append(Finding(
+            "SC-INV-COVER",
+            f"{never} ordered rack pairs get no direct circuit in a cycle",
+            path="cycle-union"))
+    wrong = int((cover[off] != expected).sum())
+    if wrong:
+        out.append(Finding(
+            "SC-INV-COVER",
+            f"{wrong} ordered rack pairs covered != {expected} times per "
+            f"cycle (u/groups - 1)",
+            path="cycle-union"))
+    if np.diagonal(cover).any():
+        out.append(Finding("SC-INV-COVER", "diagonal covered (self-circuit)",
+                           path="cycle-union"))
+    return out
+
+
+def check_expander(
+    topo: OperaTopology,
+    tensor: Optional[np.ndarray] = None,
+    config: InvariantConfig = InvariantConfig(),
+) -> List[Finding]:
+    """SC-INV-EXPAND: every slice connected; gap bound when degree >= 3."""
+    out: List[Finding] = []
+    ten = _tensor(topo, tensor)
+    for t in _slices(topo, config):
+        adj = ten[t] != 0
+        if not _connected(adj):
+            out.append(Finding("SC-INV-EXPAND",
+                               f"slice {t} graph is disconnected",
+                               path=f"slice[{t}]"))
+            continue
+        dmin = int(adj.sum(axis=1).min())
+        if dmin >= config.min_degree_for_gap:
+            need = config.gap_frac * ramanujan_bound(dmin)
+            gap = spectral_gap(adj)
+            if gap < need:
+                out.append(Finding(
+                    "SC-INV-EXPAND",
+                    f"slice {t} spectral gap {gap:.4f} < required "
+                    f"{need:.4f} ({config.gap_frac} x ramanujan({dmin}))",
+                    path=f"slice[{t}]"))
+    return out
+
+
+def check_reconfiguration(
+    topo: OperaTopology,
+    tensor: Optional[np.ndarray] = None,
+    config: InvariantConfig = InvariantConfig(),
+) -> List[Finding]:
+    """SC-INV-RECONF: at most 2*groups matchings' links change per boundary."""
+    out: List[Finding] = []
+    ten = _tensor(topo, tensor)
+    n = topo.num_racks
+    bound = 2 * topo.groups * n     # directed links: groups leave + groups join
+    T = ten.shape[0]
+    for t in range(T):
+        a = ten[t] != 0
+        b = ten[(t + 1) % T] != 0
+        changed = int((a ^ b).sum())
+        if changed > bound:
+            out.append(Finding(
+                "SC-INV-RECONF",
+                f"slice {t}->{(t + 1) % T}: {changed} directed links changed"
+                f" > bound {bound} (2 x groups x N); reconfiguration is not"
+                " piecewise",
+                path=f"slice[{t}]"))
+    return out
+
+
+def verify_topology(
+    topo: OperaTopology,
+    tensor: Optional[np.ndarray] = None,
+    config: InvariantConfig = InvariantConfig(),
+) -> List[Finding]:
+    """All four topology invariants on one tensor export."""
+    ten = _tensor(topo, tensor)
+    out: List[Finding] = []
+    out += check_matching_union(topo, ten, config)
+    out += check_cycle_coverage(topo, ten, config)
+    out += check_expander(topo, ten, config)
+    out += check_reconfiguration(topo, ten, config)
+    return out
+
+
+def check_static_fabric(
+    adj: np.ndarray,
+    name: str,
+    config: InvariantConfig = InvariantConfig(),
+) -> List[Finding]:
+    """SC-INV-FABRIC: a static comparison fabric is a healthy expander."""
+    out: List[Finding] = []
+    adj = np.asarray(adj) != 0
+    if np.diagonal(adj).any():
+        out.append(Finding("SC-INV-FABRIC", f"{name}: self-loops", path=name))
+    if not np.array_equal(adj, adj.T):
+        out.append(Finding("SC-INV-FABRIC", f"{name}: not symmetric", path=name))
+    if not _connected(adj):
+        out.append(Finding("SC-INV-FABRIC", f"{name}: disconnected", path=name))
+        return out
+    dmin = int(adj.sum(axis=1).min())
+    if dmin >= config.min_degree_for_gap:
+        need = config.gap_frac * ramanujan_bound(dmin)
+        gap = spectral_gap(adj)
+        if gap < need:
+            out.append(Finding(
+                "SC-INV-FABRIC",
+                f"{name}: spectral gap {gap:.4f} < required {need:.4f}",
+                path=name))
+    return out

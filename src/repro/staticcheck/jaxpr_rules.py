@@ -1,0 +1,242 @@
+"""Layer 2a — jaxpr rules over the jitted engine entry points.
+
+Each engine's device program is traced (abstractly — nothing executes)
+to a closed jaxpr under ``jax_enable_x64`` so dtype leaks that silent
+x64-off demotion would mask become visible, then walked recursively
+(scan/cond/pjit/pallas_call sub-jaxprs included):
+
+SC-JAX-F64        a float64 value materializes inside a float32 engine —
+                  a weak-type or literal promotion that doubles memory
+                  traffic and silently de-synchronizes the f32 oracle
+                  lockstep.
+SC-JAX-CALLBACK   a host callback primitive (pure_callback/io_callback/
+                  debug_callback/outside_call) inside a hot loop —
+                  forces a device->host sync every step.
+SC-JAX-RECOMPILE  the sweep grid compiles more than once per design
+                  point: `netsim/sweep.py` must reuse one lowering of
+                  `fluid_jax._run_batch` per (k, num_racks, groups)
+                  shape, never one per load/seed scenario.
+
+Traced entry points: ``fluid_jax._run_batch`` (the device program under
+``simulate_rotor_bulk_batch``), ``flows_jax._run_batch`` (under
+``simulate_grid``), and the four Pallas kernel ``ops`` wrappers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import os
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.staticcheck.findings import Finding
+
+CALLBACK_PRIMITIVES = {
+    "pure_callback", "io_callback", "debug_callback", "outside_call",
+    "host_callback_call", "infeed", "outfeed",
+}
+
+
+@dataclasses.dataclass
+class TracedEntry:
+    name: str
+    path: str          # repo-relative module path
+    line: int
+    jaxpr: object      # jax.core.ClosedJaxpr
+
+
+def _src_location(fn) -> Tuple[str, int]:
+    try:
+        path = inspect.getsourcefile(fn) or "<unknown>"
+        line = inspect.getsourcelines(fn)[1]
+    except (OSError, TypeError):
+        return "<unknown>", 0
+    marker = os.sep + "repro" + os.sep
+    if marker in path:
+        path = "src" + os.sep + "repro" + os.sep + path.split(marker, 1)[1]
+    return path.replace(os.sep, "/"), line
+
+
+def _entry_specs() -> List[Tuple[str, Callable, Callable]]:
+    """(name, traced_callable, args_builder) for every engine entry point.
+
+    Imports live inside so the AST layer stays importable without jax.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def sd(shape, dt=jnp.float32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    from repro.netsim import flows_jax, fluid_jax
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.mamba_scan.ops import mamba_scan
+    from repro.kernels.moe_gmm.ops import moe_gmm
+    from repro.kernels.rglru_scan.ops import rglru_scan
+
+    return [
+        (
+            "netsim.fluid_jax._run_batch",
+            lambda a, o: fluid_jax._run_batch(a, o, True, 3),
+            lambda: (sd((6, 8, 8)), sd((2, 8, 8))),
+        ),
+        (
+            "netsim.flows_jax._run_batch",
+            lambda *a: flows_jax._run_batch(*a, num_steps=7, trace=False),
+            lambda: (
+                sd((2, 5)), sd((2, 5), jnp.int32), sd((2, 5), jnp.bool_),
+                sd((2,)), sd((2,)), sd((2, 5)), sd((2, 5)),
+                sd((2,), jnp.int32), sd((2,), jnp.int32),
+            ),
+        ),
+        (
+            "kernels.flash_attention.ops.flash_attention",
+            lambda q, k, v: flash_attention(q, k, v, interpret=True),
+            lambda: (sd((1, 2, 16, 8)), sd((1, 2, 16, 8)), sd((1, 2, 16, 8))),
+        ),
+        (
+            "kernels.mamba_scan.ops.mamba_scan",
+            lambda x, dt, B, C, A, D: mamba_scan(x, dt, B, C, A, D,
+                                                 interpret=True),
+            lambda: (sd((1, 8, 16)), sd((1, 8, 16)), sd((1, 8, 4)),
+                     sd((1, 8, 4)), sd((16, 4)), sd((16,))),
+        ),
+        (
+            "kernels.moe_gmm.ops.moe_gmm",
+            lambda h, wg, wu, wd: moe_gmm(h, wg, wu, wd, interpret=True),
+            lambda: (sd((2, 8, 16)), sd((2, 16, 32)), sd((2, 16, 32)),
+                     sd((2, 32, 16))),
+        ),
+        (
+            "kernels.rglru_scan.ops.rglru_scan",
+            lambda a, bx, h0: rglru_scan(a, bx, h0, interpret=True),
+            lambda: (sd((1, 8, 16)), sd((1, 8, 16)), sd((1, 16))),
+        ),
+    ]
+
+
+def trace_entrypoints(
+    only: Optional[Sequence[str]] = None,
+) -> Tuple[List[TracedEntry], List[Finding]]:
+    """Abstractly trace every engine entry point under enable_x64."""
+    import jax
+    from jax.experimental import enable_x64
+
+    entries: List[TracedEntry] = []
+    findings: List[Finding] = []
+    with enable_x64():
+        for name, fn, build_args in _entry_specs():
+            if only and not any(o in name for o in only):
+                continue
+            path, line = _src_location(fn)
+            try:
+                closed = jax.make_jaxpr(fn)(*build_args())
+            except Exception as e:  # a broken trace is itself a finding
+                findings.append(Finding(
+                    "SC-JAX-TRACE", f"{name} failed to trace: {e!r}",
+                    path=path, line=line))
+                continue
+            entries.append(TracedEntry(name, path, line, closed))
+    return entries, findings
+
+
+def _walk_jaxpr(jaxpr, visit) -> None:
+    """Depth-first over eqns, recursing into any sub-jaxpr params."""
+    import jax
+
+    def maybe_recurse(v):
+        if isinstance(v, jax.core.ClosedJaxpr):
+            _walk_jaxpr(v.jaxpr, visit)
+        elif isinstance(v, jax.core.Jaxpr):
+            _walk_jaxpr(v, visit)
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                maybe_recurse(x)
+
+    for eqn in jaxpr.eqns:
+        visit(eqn)
+        for v in eqn.params.values():
+            maybe_recurse(v)
+
+
+def check_float64(entries: Sequence[TracedEntry]) -> List[Finding]:
+    """SC-JAX-F64 over traced engines."""
+    out: List[Finding] = []
+    for entry in entries:
+        hits: List[str] = []
+
+        def visit(eqn, hits=hits):
+            for v in eqn.outvars:
+                dt = getattr(getattr(v, "aval", None), "dtype", None)
+                if dt is not None and str(dt) == "float64":
+                    hits.append(str(eqn.primitive))
+
+        _walk_jaxpr(entry.jaxpr.jaxpr, visit)
+        if hits:
+            uniq = sorted(set(hits))
+            out.append(Finding(
+                "SC-JAX-F64",
+                f"{entry.name}: float64 values inside a float32 engine "
+                f"(primitives: {', '.join(uniq)}) — weak-type/literal "
+                "promotion leak",
+                path=entry.path, line=entry.line))
+    return out
+
+
+def check_callbacks(entries: Sequence[TracedEntry]) -> List[Finding]:
+    """SC-JAX-CALLBACK over traced engines."""
+    out: List[Finding] = []
+    for entry in entries:
+        hits: List[str] = []
+
+        def visit(eqn, hits=hits):
+            if str(eqn.primitive) in CALLBACK_PRIMITIVES:
+                hits.append(str(eqn.primitive))
+
+        _walk_jaxpr(entry.jaxpr.jaxpr, visit)
+        if hits:
+            out.append(Finding(
+                "SC-JAX-CALLBACK",
+                f"{entry.name}: host callback in hot path "
+                f"({', '.join(sorted(set(hits)))})",
+                path=entry.path, line=entry.line))
+    return out
+
+
+def count_sweep_lowerings(
+    designs: Optional[Sequence[Tuple[int, int, int]]] = None,
+    loads: Sequence[float] = (0.1, 0.3),
+    seeds: Sequence[int] = (0, 1),
+    max_cycles: int = 12,
+) -> Tuple[int, int, List[Finding]]:
+    """SC-JAX-RECOMPILE: run a representative (k, num_racks, groups) x
+    workload x load x seed grid through `netsim/sweep.py` and require at
+    most one fresh `_run_batch` lowering per design point (a warm cache
+    from earlier calls in-process may make it fewer).
+
+    Returns (new_lowerings, num_design_points, findings)."""
+    from repro.netsim import fluid_jax
+    from repro.netsim.sweep import DesignPoint, SweepSpec, run_sweep
+
+    designs = designs or ((4, 6, 1), (4, 10, 1))
+    spec = SweepSpec(
+        designs=tuple(DesignPoint(k=k, num_racks=n, groups=g)
+                      for k, n, g in designs),
+        workloads=("shuffle", "permutation"),
+        loads=tuple(loads),
+        seeds=tuple(seeds),
+        max_cycles=max_cycles,
+    )
+    before = fluid_jax._run_batch._cache_size()
+    run_sweep(spec)
+    new = fluid_jax._run_batch._cache_size() - before
+    path, line = _src_location(fluid_jax._run_batch)
+    findings: List[Finding] = []
+    if new > len(designs):
+        findings.append(Finding(
+            "SC-JAX-RECOMPILE",
+            f"sweep grid of {len(designs)} design points x "
+            f"{spec.scenarios_per_design} scenarios compiled {new} "
+            "lowerings — the engine must compile once per design-point "
+            "shape, not per load/seed",
+            path=path, line=line))
+    return new, len(designs), findings

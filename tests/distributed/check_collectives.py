@@ -17,15 +17,13 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro import compat  # noqa: E402
 from repro.core import collectives as C  # noqa: E402
 
-shard_map = compat.shard_map
-
 mesh = compat.make_mesh((2, 4), ("pod", "data"))
 rng = np.random.default_rng(0)
 
 
 def run(fn, x, in_spec, out_spec):
-    f = shard_map(fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
-                  check_vma=False)
+    f = compat.shard_map(fn, mesh=mesh, in_specs=(in_spec,), out_specs=out_spec,
+                         check_vma=False)
     return jax.jit(f)(x)
 
 

@@ -17,7 +17,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.configs.base import reduced_config  # noqa: E402
 from repro.data.pipeline import SyntheticLM  # noqa: E402
-from repro.launch.mesh import make_mesh, pctx_for_mesh  # noqa: E402
+from repro.compat import make_mesh  # noqa: E402
+from repro.launch.mesh import pctx_for_mesh  # noqa: E402
 from repro.models import init_params  # noqa: E402
 from repro.models.model import loss_fn, param_shapes  # noqa: E402
 from repro.models.parallel import single_device_ctx  # noqa: E402

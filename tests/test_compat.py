@@ -1,0 +1,155 @@
+"""Unit tests for the repro.compat shim itself (ROADMAP jax compat policy).
+
+Asserts the modern->legacy kwarg mapping (`check_vma`->`check_rep`,
+`axis_names`->`auto`, ambient-mesh resolution) and that the
+`HAS_PARTIAL_MANUAL` gate degrades the rotor pod-sync trainer without
+changing the update math.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+
+legacy_only = pytest.mark.skipif(
+    compat.HAS_NATIVE_SHARD_MAP,
+    reason="legacy kwarg mapping only exists on jax 0.4.x",
+)
+
+
+@pytest.fixture()
+def mesh():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+class TestShardMapKwargMapping:
+    @pytest.fixture()
+    def captured(self, monkeypatch):
+        """Intercept the legacy shard_map and record the mapped kwargs."""
+        calls = {}
+
+        def fake(f, mesh, in_specs, out_specs, check_rep, auto):
+            calls.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_rep=check_rep, auto=auto)
+            return f
+
+        monkeypatch.setattr(compat, "_legacy_shard_map", fake)
+        return calls
+
+    @legacy_only
+    def test_check_vma_maps_to_check_rep(self, mesh, captured):
+        compat.shard_map(lambda x: x, mesh, in_specs=P(), out_specs=P(),
+                         check_vma=True)
+        assert captured["check_rep"] is True
+        assert captured["auto"] == frozenset()
+        compat.shard_map(lambda x: x, mesh, in_specs=P(), out_specs=P(),
+                         check_vma=False)
+        assert captured["check_rep"] is False
+
+    @legacy_only
+    def test_axis_names_maps_to_auto_complement(self, mesh, captured):
+        compat.shard_map(lambda x: x, mesh, in_specs=P(), out_specs=P(),
+                         axis_names={"data"})
+        assert captured["auto"] == frozenset({"model"})
+        # partial-manual cannot check replication on 0.4.x: check_rep is
+        # forced off whenever auto is nonempty, even with check_vma=True
+        assert captured["check_rep"] is False
+
+    @legacy_only
+    def test_full_axis_names_keeps_check_rep(self, mesh, captured):
+        compat.shard_map(lambda x: x, mesh, in_specs=P(), out_specs=P(),
+                         check_vma=True, axis_names={"data", "model"})
+        assert captured["auto"] == frozenset()
+        assert captured["check_rep"] is True
+
+    @legacy_only
+    def test_ambient_mesh_resolution(self, mesh, captured):
+        with compat.set_mesh(mesh):
+            compat.shard_map(lambda x: x, in_specs=P(), out_specs=P())
+        assert captured["mesh"] is mesh
+
+    @legacy_only
+    def test_no_mesh_no_ambient_raises(self):
+        with pytest.raises(ValueError, match="ambient mesh"):
+            compat.shard_map(lambda x: x, in_specs=P(), out_specs=P())
+
+
+class TestShardMapExecutes:
+    def test_full_manual_matches_reference(self, mesh):
+        x = jnp.arange(8.0).reshape(2, 4)
+        with compat.set_mesh(mesh):
+            f = compat.shard_map(
+                lambda a: a * 2.0, mesh,
+                in_specs=P("data", None), out_specs=P("data", None),
+                check_vma=False,
+            )
+            np.testing.assert_allclose(np.asarray(jax.jit(f)(x)),
+                                       np.asarray(x) * 2.0)
+
+    def test_axis_size_inside_region(self, mesh):
+        def body(a):
+            return a * compat.axis_size("data")
+
+        with compat.set_mesh(mesh):
+            f = compat.shard_map(body, mesh, in_specs=P("data", None),
+                                 out_specs=P("data", None), check_vma=False)
+            out = jax.jit(f)(jnp.ones((2, 2)))
+        np.testing.assert_allclose(np.asarray(out), 1.0)
+
+
+class TestMakeMesh:
+    def test_axes_and_shape(self):
+        m = compat.make_mesh((1, 1), ("data", "model"))
+        assert m.axis_names == ("data", "model")
+        assert dict(m.shape) == {"data": 1, "model": 1}
+
+    def test_set_mesh_context_installs_ambient(self):
+        m = compat.make_mesh((1,), ("d",))
+        with compat.set_mesh(m):
+            from jax._src import mesh as mesh_lib
+
+            assert mesh_lib.thread_resources.env.physical_mesh is m
+
+
+class TestPartialManualGate:
+    def test_rotor_grad_sync_degrades_without_changing_update(self):
+        """With HAS_PARTIAL_MANUAL False (jax 0.4.x), grad_sync='rotor'
+        must fall back to the GSPMD path: same params, same metrics as
+        grad_sync='xla' after a train step."""
+        from repro.configs import get_config
+        from repro.configs.base import reduced_config
+        from repro.data.pipeline import SyntheticLM
+        from repro.launch.mesh import pctx_for_mesh
+        from repro.models import init_params
+        from repro.optim.adamw import AdamWConfig
+        from repro.train import trainer as trainer_mod
+        from repro.train.trainer import init_train_state, make_train_step
+
+        base = reduced_config(get_config("smollm-360m")).replace(
+            num_layers=1, vocab_size=64)
+        params = init_params(base, jax.random.key(0))
+        opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=4)
+        src = SyntheticLM(base.vocab_size, 8, 4, seed=0)
+        batch = jax.tree.map(jnp.asarray, src.batch_at(0))
+        mesh = compat.make_mesh((1, 1, 1), ("pod", "data", "model"))
+        pctx = pctx_for_mesh(mesh)
+        assert pctx.pod_axis == "pod"
+
+        outs = {}
+        for sync in ("xla", "rotor"):
+            cfg = base.replace(grad_sync=sync)
+            with compat.set_mesh(mesh):
+                state = init_train_state(cfg, params)
+                step = jax.jit(make_train_step(cfg, pctx, opt))
+                outs[sync] = step(state, batch)
+
+        if not trainer_mod.HAS_PARTIAL_MANUAL:
+            # both configs must have taken the identical GSPMD path
+            (s1, m1), (s2, m2) = outs["xla"], outs["rotor"]
+            assert float(m1["loss"]) == pytest.approx(float(m2["loss"]),
+                                                      rel=1e-6)
+            for a, b in zip(jax.tree.leaves(s1["params"]),
+                            jax.tree.leaves(s2["params"])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -86,7 +86,8 @@ class TestNormDowncast:
 class TestLayouts:
     def test_dp_only_pctx_math_unchanged(self):
         """dp_only must be a layout change only: same loss on 1 device."""
-        from repro.launch.mesh import make_mesh, pctx_for_mesh
+        from repro.compat import make_mesh
+        from repro.launch.mesh import pctx_for_mesh
 
         cfg = reduced_config(get_config("smollm-360m")).replace(num_layers=2)
         params = init_params(cfg, jax.random.key(0))
