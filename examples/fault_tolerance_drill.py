@@ -5,6 +5,15 @@ heartbeats feed the FleetMonitor; on a missed-heartbeat failure the
 controller forms a RestartPlan (shrunk data axis), restores the latest
 elastic checkpoint, and resumes deterministically (data is step-indexed).
 
+This is the *control-plane* half of the repo's failure story.  The
+*data-plane* half — what the fabric itself does while a link, ToR, or
+rotor switch is down — lives in `repro.netsim.faults`: the same
+detect-lag/recover timeline drives per-slice capacity masks through
+both batched engines (blackhole during the detection window, reroute
+and retry after), and `benchmarks/fig11_faults.py` measures the
+resulting throughput retention and FCT inflation dynamically (the
+paper's Fig. 11).  See ROADMAP "Fault model (PR 4)".
+
     PYTHONPATH=src python examples/fault_tolerance_drill.py
 """
 import tempfile

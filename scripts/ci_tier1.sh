@@ -10,4 +10,7 @@ python scripts/smoke_all.py
 # static analysis over the whole tree (invariants + AST + jaxpr rules);
 # fails on new violations and emits the machine-readable report.
 python -m repro.staticcheck --json results/staticcheck.json
+# dynamic Fig. 11 fault sweep on the paper design point (--fast mode);
+# benchmarks/ is a repo-root package, so the root joins PYTHONPATH here.
+PYTHONPATH=src:. python benchmarks/fig11_faults.py --fast
 echo "CI TIER-1 GREEN"

@@ -20,14 +20,42 @@ from repro.core.topology import OperaTopology
 
 @dataclasses.dataclass
 class FailureSet:
-    """Failed components.  Links are undirected rack pairs."""
+    """Failed components.  Links are undirected rack pairs; uplinks are
+    physical ``(rack, switch)`` fibers — the sampling unit of the fault
+    subsystem (`netsim.faults`), where a dead fiber kills both
+    directions of that rack's edge on every matching the switch serves.
+
+    Membership is set-based, but anything that *iterates* in a
+    result-affecting order must go through the ``sorted_*`` views so
+    results never depend on set hashing.
+    """
 
     links: Set[Tuple[int, int]] = dataclasses.field(default_factory=set)
     tors: Set[int] = dataclasses.field(default_factory=set)
     switches: Set[int] = dataclasses.field(default_factory=set)
+    uplinks: Set[Tuple[int, int]] = dataclasses.field(default_factory=set)
 
     def link_failed(self, a: int, b: int) -> bool:
         return (min(a, b), max(a, b)) in self.links
+
+    def uplink_failed(self, rack: int, switch: int) -> bool:
+        return (rack, switch) in self.uplinks
+
+    @property
+    def sorted_links(self) -> List[Tuple[int, int]]:
+        return sorted(self.links)
+
+    @property
+    def sorted_tors(self) -> List[int]:
+        return sorted(self.tors)
+
+    @property
+    def sorted_switches(self) -> List[int]:
+        return sorted(self.switches)
+
+    @property
+    def sorted_uplinks(self) -> List[Tuple[int, int]]:
+        return sorted(self.uplinks)
 
 
 def slice_adjacency(
@@ -41,11 +69,16 @@ def slice_adjacency(
         if failures and s in failures.switches:
             continue
         mask = p != idx
+        if failures and failures.uplinks:
+            dead = np.fromiter(
+                ((int(r), s) in failures.uplinks for r in idx), bool, n
+            )
+            mask = mask & ~dead & ~dead[p]
         adj[idx[mask], p[mask]] = True
     if failures:
-        for (a, b) in failures.links:
+        for (a, b) in failures.sorted_links:
             adj[a, b] = adj[b, a] = False
-        for tor in failures.tors:
+        for tor in failures.sorted_tors:
             adj[tor, :] = False
             adj[:, tor] = False
     return adj

@@ -73,6 +73,23 @@ class FlowScenario:
     is_bulk: np.ndarray          # (n,) bool: bulk-pool class
     lat_pool_Bps: float          # latency-class pool [bytes/s]
     bulk_pool_Bps: float         # bulk-class pool [bytes/s]
+    # Optional fault projection (faults.apply_flow_faults) — all six are
+    # set together.  Windows are [start, end) step intervals per flow:
+    # a *blackholed* flow keeps consuming its pool share with zero
+    # progress (retransmits into a dead circuit, pre-detection); a
+    # *frozen* flow (behind a detected-dead ToR) gets no share and no
+    # progress until recovery, then retries.  Scales are (steps,)
+    # per-step pool-capacity multipliers for detected capacity loss.
+    blk_start: Optional[np.ndarray] = None   # (n,) int32
+    blk_end: Optional[np.ndarray] = None     # (n,) int32
+    frz_start: Optional[np.ndarray] = None   # (n,) int32
+    frz_end: Optional[np.ndarray] = None     # (n,) int32
+    lat_scale: Optional[np.ndarray] = None   # (steps,) float64
+    bulk_scale: Optional[np.ndarray] = None  # (steps,) float64
+
+    @property
+    def has_faults(self) -> bool:
+        return self.blk_start is not None
 
     @property
     def num_flows(self) -> int:
@@ -255,6 +272,7 @@ def _oracle_steps(
     identical per-step math in jnp — change the two together."""
     n = scn.num_flows
     nic = scn.nic_Bps
+    faulted = scn.has_faults
     remaining = scn.sizes.astype(np.float64).copy()
     done_step = np.full(n, -1, np.int64)
     allow_mid = scn.deficit_allowance(scn.mid_step)
@@ -264,6 +282,16 @@ def _oracle_steps(
     traces: List[np.ndarray] = []
     for step in range(scn.steps):
         active = (step >= scn.start_step) & (remaining > 0)
+        if faulted:
+            # frozen: behind a detected-dead ToR — out of the share
+            # computation entirely until recovery, then retries.
+            # blackholed: committed to a dead circuit pre-detection —
+            # still consumes its share, makes zero progress.
+            frozen = (step >= scn.frz_start) & (step < scn.frz_end)
+            blackhole = (step >= scn.blk_start) & (step < scn.blk_end)
+            sharing = active & ~frozen
+        else:
+            sharing = active
         if step == scn.mid_step:
             rem_mid = float(np.maximum(remaining - allow_mid, 0.0).sum())
         if step == scn.end_step:
@@ -271,15 +299,21 @@ def _oracle_steps(
         if not trace and not active.any() and step > last_start \
                 and step > scn.end_step:
             break
-        for pool_Bps, mask in (
-            (scn.lat_pool_Bps, active & ~scn.is_bulk),
-            (scn.bulk_pool_Bps, active & scn.is_bulk),
+        for pool_Bps, scale, mask in (
+            (scn.lat_pool_Bps, scn.lat_scale, sharing & ~scn.is_bulk),
+            (scn.bulk_pool_Bps, scn.bulk_scale, sharing & scn.is_bulk),
         ):
+            if faulted:
+                pool_Bps = pool_Bps * float(scale[step])
             k = int(mask.sum())
             if k == 0 or pool_Bps <= 0:
                 continue
             share = min(pool_Bps / k, nic) * scn.dt_s
-            remaining[mask] -= np.minimum(remaining[mask], share)
+            if faulted:
+                prog = mask & ~blackhole
+                remaining[prog] -= np.minimum(remaining[prog], share)
+            else:
+                remaining[mask] -= np.minimum(remaining[mask], share)
             newly = mask & (remaining <= 0) & (done_step < 0)
             done_step[newly] = step + 1
         if trace:

@@ -99,6 +99,82 @@ def _run_batch(
     )
 
 
+def _flow_step_faulted(carry, xs, scn_ops, trace: bool):
+    """`_flow_step` under per-flow fault windows and per-step pool
+    scales — the faulted scan body.
+
+    Mirrors `flows._oracle_steps`'s faulted branch exactly: frozen flows
+    (detected-dead ToR) leave the share computation, blackholed flows
+    (dead circuit, pre-detection) consume their share with zero
+    progress, and each pool is scaled by the step's surviving-capacity
+    fraction; change the two together.  Windows are data (int32
+    comparisons), so one lowering serves every failure draw.
+    """
+    remaining, done_step, rem_mid, rem_end = carry
+    step, lat_scale_t, bulk_scale_t = xs
+    (start, is_bulk, lat_u, bulk_u, allow_mid, allow_end, mid_step,
+     end_step, blk_start, blk_end, frz_start, frz_end) = scn_ops
+    active = (step >= start) & (remaining > 0)
+    frozen = (step >= frz_start) & (step < frz_end)
+    blackhole = (step >= blk_start) & (step < blk_end)
+    sharing = active & ~frozen
+    rem_mid = jnp.where(
+        step == mid_step, jnp.maximum(remaining - allow_mid, 0.0).sum(), rem_mid
+    )
+    rem_end = jnp.where(
+        step == end_step, jnp.maximum(remaining - allow_end, 0.0).sum(), rem_end
+    )
+    for pool_u, scale_t, mask in (
+        (lat_u, lat_scale_t, sharing & ~is_bulk),
+        (bulk_u, bulk_scale_t, sharing & is_bulk),
+    ):
+        pool_u = pool_u * scale_t
+        m = mask.astype(remaining.dtype)
+        k = m.sum()
+        share = jnp.minimum(pool_u / jnp.maximum(k, 1.0), 1.0)
+        share = jnp.where(pool_u > 0, share, 0.0)
+        prog = (mask & ~blackhole).astype(remaining.dtype)
+        remaining = remaining - jnp.minimum(remaining, share) * prog
+        newly = mask & (remaining <= 0) & (done_step < 0)
+        done_step = jnp.where(newly, step + 1, done_step)
+    carry = (remaining, done_step, rem_mid, rem_end)
+    return carry, (remaining if trace else jnp.zeros((), remaining.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps", "trace"))
+def _run_batch_faulted(
+    remaining0, start_step, is_bulk, lat_u, bulk_u,
+    allow_mid, allow_end, mid_step, end_step,
+    blk_start, blk_end, frz_start, frz_end, lat_scale, bulk_scale,
+    num_steps: int, trace: bool,
+):
+    """`_run_batch` with per-flow fault windows (B, n) and per-step pool
+    scales (B, num_steps) vmapped alongside the flow state."""
+
+    def one_scenario(rem0, start, bulk_mask, lat, blk, amid, aend,
+                     mstep, estep, bs, be, fs, fe, lsc, bsc):
+        scn_ops = (start, bulk_mask, lat, blk, amid, aend, mstep, estep,
+                   bs, be, fs, fe)
+        carry0 = (
+            rem0,
+            jnp.full(rem0.shape, -1, jnp.int32),
+            jnp.zeros((), rem0.dtype),
+            jnp.zeros((), rem0.dtype),
+        )
+        steps = jnp.arange(num_steps, dtype=jnp.int32)
+        (remaining, done_step, rem_mid, rem_end), ys = jax.lax.scan(
+            lambda c, xs: _flow_step_faulted(c, xs, scn_ops, trace),
+            carry0, (steps, lsc, bsc)
+        )
+        return remaining, done_step, rem_mid, rem_end, ys
+
+    return jax.vmap(one_scenario)(
+        remaining0, start_step, is_bulk, lat_u, bulk_u,
+        allow_mid, allow_end, mid_step, end_step,
+        blk_start, blk_end, frz_start, frz_end, lat_scale, bulk_scale,
+    )
+
+
 @dataclasses.dataclass
 class FlowBatchResult:
     """Batched engine output: one `FlowSimResult` per scenario (computed
@@ -121,7 +197,10 @@ def simulate_flows_batch(
 
     All scenarios must share dt/horizon/tail (one static step count per
     compiled program); flow counts may differ — shorter rows are padded
-    with never-active flows.
+    with never-active flows.  Rows carrying a fault projection
+    (`faults.apply_flow_faults`) route the whole batch through the
+    faulted lowering; fault-free batches run the original program
+    untouched (bit-identical no-op dispatch).
     """
     if not scenarios:
         return FlowBatchResult([], [])
@@ -144,6 +223,19 @@ def simulate_flows_batch(
     mid_step = np.zeros(B, np.int32)
     end_step = np.zeros(B, np.int32)
     units = np.zeros(B)
+    faulted = any(s.has_faults for s in scenarios)
+    if faulted:
+        # NEVER-filled windows for fault-free rows and pad flows; unit
+        # scales for fault-free rows — the faulted step then reduces to
+        # the plain recurrence for them (to f32 fusion tolerance).
+        from repro.netsim.faults import NEVER
+
+        blk_start = np.full((B, n_max), NEVER, np.int32)
+        blk_end = np.full((B, n_max), NEVER, np.int32)
+        frz_start = np.full((B, n_max), NEVER, np.int32)
+        frz_end = np.full((B, n_max), NEVER, np.int32)
+        lat_scale = np.ones((B, num_steps), np.float64)   # staticcheck: ok SC-AST-F64 (host staging)
+        bulk_scale = np.ones((B, num_steps), np.float64)  # staticcheck: ok SC-AST-F64 (host staging)
     for b, s in enumerate(scenarios):
         n = s.num_flows
         unit = s.nic_Bps * s.dt_s          # bytes one NIC serves per step
@@ -157,8 +249,15 @@ def simulate_flows_batch(
         bulk_u[b] = s.bulk_pool_Bps / s.nic_Bps
         mid_step[b] = s.mid_step
         end_step[b] = s.end_step
+        if faulted and s.has_faults:
+            blk_start[b, :n] = s.blk_start
+            blk_end[b, :n] = s.blk_end
+            frz_start[b, :n] = s.frz_start
+            frz_end[b, :n] = s.frz_end
+            lat_scale[b] = s.lat_scale[:num_steps]
+            bulk_scale[b] = s.bulk_scale[:num_steps]
 
-    remaining, done_step, rem_mid, rem_end, ys = _run_batch(
+    common = (
         jnp.asarray(remaining0, dtype),
         jnp.asarray(start_step),
         jnp.asarray(is_bulk),
@@ -168,9 +267,19 @@ def simulate_flows_batch(
         jnp.asarray(allow_end, dtype),
         jnp.asarray(mid_step),
         jnp.asarray(end_step),
-        num_steps,
-        bool(trace),
     )
+    if faulted:
+        remaining, done_step, rem_mid, rem_end, ys = _run_batch_faulted(
+            *common,
+            jnp.asarray(blk_start), jnp.asarray(blk_end),
+            jnp.asarray(frz_start), jnp.asarray(frz_end),
+            jnp.asarray(lat_scale, dtype), jnp.asarray(bulk_scale, dtype),
+            num_steps, bool(trace),
+        )
+    else:
+        remaining, done_step, rem_mid, rem_end, ys = _run_batch(
+            *common, num_steps, bool(trace),
+        )
     done_step = np.asarray(done_step)
     # Device f32 results are de-normalized on the host at float64, matching
     # the float64 oracle's finalize() inputs.

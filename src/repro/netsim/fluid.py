@@ -44,6 +44,7 @@ class RotorFluidResult:
     wire_bytes: float                   # total bytes that crossed links
     goodput_bytes: float                # demand bytes delivered
     slices_run: int
+    blackholed_bytes: float = 0.0       # sent into undetected-dead circuits
 
     @property
     def bandwidth_tax(self) -> float:
@@ -99,6 +100,79 @@ def rotor_slice_step(
     return own, relay, delivered, moved
 
 
+def rotor_slice_step_faulted(
+    own: np.ndarray,
+    relay: np.ndarray,
+    adj_cap: np.ndarray,
+    e_real: np.ndarray,
+    e_known: np.ndarray,
+    tor_real: np.ndarray,
+    tor_known: np.ndarray,
+    pair_dead: np.ndarray,
+    vlb: bool = True,
+) -> Tuple[np.ndarray, np.ndarray, float, float, float]:
+    """`rotor_slice_step` under failure masks (from `faults.step_masks`).
+
+    Graceful-degradation semantics (§3.4, Fig. 11):
+
+      * offered capacity excludes *detected*-dead edges and physically
+        dead source ToRs: ``cap = adj * (1 - e_known) * (1 - tor_real)``
+        on the row side — direct traffic re-queues around known holes;
+      * bytes committed to an edge that is dead but not yet detected
+        (the hello-protocol lag) consume the wire slot and are lost in
+        flight: they stay queued at the source (retransmit) and count
+        toward ``blackholed``;
+      * VLB spreads only backlog for destinations not known-dead, over
+        believed-live room; the blackholed fraction of the spread is
+        refunded to the source queue;
+      * relayed bytes whose direct circuit to the destination is known
+        dead for the whole cycle (``pair_dead``, one serving switch per
+        pair) re-join the spread — RotorLB forwards non-local traffic
+        onward rather than hold it for a circuit that will not come.
+
+    With all-zero masks every expression reduces to the exact
+    failure-free arithmetic (x*1.0 and x+0.0 are IEEE-exact), so
+    `FailureSchedule.empty()` is bit-identical to `rotor_slice_step`.
+    `fluid_jax._slice_step_faulted` implements the same math in jnp —
+    change the two together.  Returns (own, relay, delivered_bytes,
+    vlb_first_hop_bytes, blackholed_bytes).
+    """
+    cap = adj_cap * (1.0 - e_known) * (1.0 - tor_real)[:, None]
+    arrive = 1.0 - e_real
+    send_own = np.minimum(own, cap)
+    own = own - send_own * arrive
+    room = cap - send_own
+    send_relay = np.minimum(relay, room)
+    relay = relay - send_relay * arrive
+    room = room - send_relay
+    delivered = float((send_own * arrive).sum() + (send_relay * arrive).sum())
+    attempted = float(send_own.sum() + send_relay.sum())
+    blackholed = attempted - delivered
+
+    moved = 0.0
+    if vlb:
+        dst_ok = 1.0 - tor_known
+        elig = np.where(cap > 0, 0.0, own * dst_ok[None, :])
+        relig = relay * pair_dead * dst_ok[None, :]   # stuck relay re-spreads
+        q = elig.sum(1) + relig.sum(1)
+        r = room.sum(1)
+        t = np.minimum(q, r)
+        frac = np.divide(t, q, out=np.zeros_like(q), where=q > 0)[:, None]
+        take = elig * frac
+        rtake = relig * frac
+        share = room * np.divide(
+            np.ones_like(r), r, out=np.zeros_like(r), where=r > 0
+        )[:, None]
+        lost = (share * e_real).sum(1)        # spread fraction that blackholes
+        own = own - take + take * lost[:, None]
+        relay = relay - rtake + rtake * lost[:, None]
+        relay = relay + (share * arrive).T @ (take + rtake)
+        lost_bytes = float(((take + rtake).sum(1) * lost).sum())
+        moved = float(t.sum()) - lost_bytes   # first hops that truly crossed
+        blackholed += lost_bytes
+    return own, relay, delivered, moved, blackholed
+
+
 def simulate_rotor_bulk(
     cfg: OperaNetConfig,
     demand: np.ndarray,            # rack->rack bytes (bulk class)
@@ -106,6 +180,8 @@ def simulate_rotor_bulk(
     max_cycles: int = 400,
     topo: Optional[OperaTopology] = None,
     seed: int = 0,
+    faults=None,                   # Optional[faults.FailureSchedule]
+    paced_cycles: int = 0,
 ) -> RotorFluidResult:
     n = cfg.num_racks
     topo = topo or build_opera_topology(n, cfg.u, seed=seed, groups=cfg.groups)
@@ -113,18 +189,46 @@ def simulate_rotor_bulk(
     cap = slice_capacity_bytes(cfg, t)       # bytes/link/slice
     adj_caps = topo.matching_tensor().astype(np.float64) * cap
 
+    masks = None
+    if faults is not None and faults.events:
+        # Event-less schedules skip mask compilation and run the
+        # original failure-free step — mirrors `fluid_jax`'s dispatch,
+        # which keeps `FailureSchedule.empty()` bit-identical there.
+        from repro.netsim.faults import compile_fault_masks, step_masks
+
+        masks = compile_fault_masks(topo, faults)
+
     own = demand.astype(np.float64).copy()
-    relay = np.zeros_like(own)
     total = own.sum()
+    inject = None
+    if paced_cycles:
+        # paced offering: demand arrives in equal installments at the
+        # first `paced_cycles` cycle starts instead of all at t=0
+        inject = own * (1.0 / paced_cycles)
+        own = np.zeros_like(own)
+    relay = np.zeros_like(own)
     done = 0.0
     wire = 0.0
+    blackholed = 0.0
     finished, times = [], []
 
     steps = 0
     for step in range(max_cycles * topo.num_slices):
-        own, relay, delivered, moved = rotor_slice_step(
-            own, relay, adj_caps[step % topo.num_slices], vlb
-        )
+        sl = step % topo.num_slices
+        if inject is not None and sl == 0 and step // topo.num_slices < paced_cycles:
+            own = own + inject
+        if masks is None:
+            own, relay, delivered, moved = rotor_slice_step(
+                own, relay, adj_caps[sl], vlb
+            )
+        else:
+            e_real, e_known, tor_real, tor_known, pair_dead = step_masks(
+                masks, 0, step, sl)
+            own, relay, delivered, moved, blk = rotor_slice_step_faulted(
+                own, relay, adj_caps[sl],
+                e_real, e_known, tor_real, tor_known, pair_dead, vlb,
+            )
+            blackholed += blk
         done += delivered
         wire += delivered + moved
         steps += 1
@@ -147,6 +251,7 @@ def simulate_rotor_bulk(
         wire_bytes=wire,
         goodput_bytes=done,
         slices_run=steps,
+        blackholed_bytes=blackholed,
     )
 
 

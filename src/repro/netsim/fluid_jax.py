@@ -90,6 +90,124 @@ def _run_batch(adj, own0, vlb: bool, num_cycles: int):
     return jax.vmap(one_scenario)(own0)
 
 
+def _slice_step_faulted(state, xs, ops, vlb: bool):
+    """One topology slice under failure masks — the faulted scan body.
+
+    Mirrors `fluid.rotor_slice_step_faulted` exactly: per-step masks are
+    rebuilt from the compiled component timelines (`faults.step_masks`
+    is the numpy reference) with pure int32 comparisons on the global
+    step counter carried through the scan — masks are data, so one
+    lowering serves every failure draw; change the two together.  With
+    an empty schedule every expression reduces algebraically to
+    `_slice_step` (x*1.0 / x+0.0), but XLA's fusion-dependent reduction
+    order still drifts the last f32 ulp between the two programs — the
+    public API dispatches event-less schedules to `_run_batch` so the
+    no-op case stays bit-identical (see `_faults_all_empty`).
+    """
+    own, relay, done, wire, blk, g = state
+    adj, sw = xs
+    (pair_sw, up_onset, up_detect, up_recover,
+     tor_onset, tor_detect, tor_recover) = ops
+    up_f = (g >= up_onset) & (g < up_recover)
+    up_k = (g >= up_detect) & (g < up_recover)
+    tor_fb = (g >= tor_onset) & (g < tor_recover)
+    tor_kb = (g >= tor_detect) & (g < tor_recover)
+    i_f = jnp.take_along_axis(up_f, sw, axis=1)
+    i_k = jnp.take_along_axis(up_k, sw, axis=1)
+    e_real = (i_f | i_f.T | tor_fb[:, None] | tor_fb[None, :]).astype(own.dtype)
+    e_known = (i_k | i_k.T | tor_kb[:, None] | tor_kb[None, :]).astype(own.dtype)
+    p_k = jnp.take_along_axis(up_k, pair_sw, axis=1)
+    pair_dead = (
+        p_k | p_k.T | tor_kb[:, None] | tor_kb[None, :]
+    ).astype(own.dtype)
+    tor_real = tor_fb.astype(own.dtype)
+    tor_known = tor_kb.astype(own.dtype)
+
+    cap = adj * (1.0 - e_known) * (1.0 - tor_real)[:, None]
+    arrive = 1.0 - e_real
+    send_own = jnp.minimum(own, cap)
+    own = own - send_own * arrive
+    room = cap - send_own
+    send_relay = jnp.minimum(relay, room)
+    relay = relay - send_relay * arrive
+    room = room - send_relay
+    delivered = (send_own * arrive).sum() + (send_relay * arrive).sum()
+    attempted = send_own.sum() + send_relay.sum()
+    done = done + delivered
+    wire = wire + delivered
+    blk = blk + (attempted - delivered)
+    if vlb:
+        dst_ok = 1.0 - tor_known
+        elig = jnp.where(cap > 0, 0.0, own * dst_ok[None, :])
+        relig = relay * pair_dead * dst_ok[None, :]  # stuck relay re-spreads
+        q = elig.sum(1) + relig.sum(1)
+        r = room.sum(1)
+        t = jnp.minimum(q, r)
+        frac = jnp.where(q > 0, t / jnp.maximum(q, 1e-30), 0.0)[:, None]
+        take = elig * frac
+        rtake = relig * frac
+        share = room * jnp.where(r > 0, 1.0 / jnp.maximum(r, 1e-30), 0.0)[:, None]
+        lost = (share * e_real).sum(1)
+        own = own - take + take * lost[:, None]
+        relay = relay - rtake + rtake * lost[:, None]
+        relay = relay + (share * arrive).T @ (take + rtake)
+        lost_sum = ((take + rtake).sum(1) * lost).sum()
+        wire = wire + (t.sum() - lost_sum)
+        blk = blk + lost_sum
+    return (own, relay, done, wire, blk, g + 1), (done, wire)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("vlb", "num_cycles", "paced_cycles")
+)
+def _run_batch_faulted(
+    adj, sw, pair_sw, own0,
+    up_onset, up_detect, up_recover, tor_onset, tor_detect, tor_recover,
+    vlb: bool, num_cycles: int, paced_cycles: int,
+):
+    """`_run_batch` with per-row failure timelines (and optional paced
+    demand injection).  The mask arrays are vmapped scenario operands —
+    every batch row carries an independent failure draw — while the
+    topology tensor, its switch-id map, and the per-pair serving-switch
+    map are shared design-time state.  Also returns the per-row
+    blackholed-byte total."""
+    def one_scenario(own_init, uo, ud, ur, to, td, tr):
+        step = functools.partial(
+            _slice_step_faulted, ops=(pair_sw, uo, ud, ur, to, td, tr), vlb=vlb
+        )
+        if paced_cycles:
+            inject = own_init * (1.0 / paced_cycles)
+            own_start = jnp.zeros_like(own_init)
+        else:
+            own_start = own_init
+
+        def one_cycle(carry, c):
+            if paced_cycles:
+                own, relay, done, wire, blk, g = carry
+                own = own + inject * (c < paced_cycles).astype(own.dtype)
+                carry = (own, relay, done, wire, blk, g)
+            carry, ys = jax.lax.scan(step, carry, (adj, sw))
+            return carry, ys
+
+        carry0 = (
+            own_start,
+            jnp.zeros_like(own_start),
+            jnp.zeros((), own_start.dtype),
+            jnp.zeros((), own_start.dtype),
+            jnp.zeros((), own_start.dtype),
+            jnp.zeros((), jnp.int32),
+        )
+        (own, relay, _, _, blk, _), (done_t, wire_t) = jax.lax.scan(
+            one_cycle, carry0, jnp.arange(num_cycles, dtype=jnp.int32)
+        )
+        return done_t.reshape(-1), wire_t.reshape(-1), own.sum() + relay.sum(), blk
+
+    return jax.vmap(one_scenario)(
+        own0, up_onset, up_detect, up_recover,
+        tor_onset, tor_detect, tor_recover,
+    )
+
+
 @dataclasses.dataclass
 class RotorBatchResult:
     """Per-scenario bulk stats for a batch of B scenarios over T slices.
@@ -110,6 +228,7 @@ class RotorBatchResult:
     residual_bytes: np.ndarray     # (B,) undelivered at scan end
     total_bytes: np.ndarray        # (B,) offered demand
     slices_run: np.ndarray         # (B,)
+    blackholed_bytes: Optional[np.ndarray] = None  # (B,) lost-in-flight sends
 
     @property
     def bandwidth_tax(self) -> np.ndarray:
@@ -131,7 +250,30 @@ class RotorBatchResult:
             wire_bytes=float(self.wire_bytes[b]),
             goodput_bytes=float(self.goodput_bytes[b]),
             slices_run=k,
+            blackholed_bytes=(
+                float(self.blackholed_bytes[b])
+                if self.blackholed_bytes is not None else 0.0
+            ),
         )
+
+
+def _faults_all_empty(faults) -> bool:
+    """True when `faults` carries no failure events at all — None, an
+    event-less `FailureSchedule`, or a sequence of event-less ones.
+    Empty schedules dispatch to the original failure-free program so
+    the no-op case is bit-identical by construction (the faulted
+    lowering matches it only to f32 fusion tolerance)."""
+    if faults is None:
+        return True
+    from repro.netsim.faults import FailureSchedule
+
+    if isinstance(faults, FailureSchedule):
+        return faults.is_empty
+    if isinstance(faults, (list, tuple)):
+        return all(
+            isinstance(f, FailureSchedule) and f.is_empty for f in faults
+        )
+    return False
 
 
 def simulate_rotor_bulk_batch(
@@ -142,12 +284,22 @@ def simulate_rotor_bulk_batch(
     topo: Optional[OperaTopology] = None,
     seed: int = 0,
     dtype=jnp.float32,
+    faults=None,               # FailureSchedule | Sequence[FailureSchedule]
+    paced_cycles: int = 0,
 ) -> RotorBatchResult:
     """Simulate a batch of bulk-demand scenarios in one vmapped call.
 
     All scenarios share one topology (a design point); the batch axis is
     the scenario grid — different workloads, load levels, and demand
     seeds.  Design-point sweeps call this once per point (shapes differ).
+
+    `faults` is a `faults.FailureSchedule` (shared by every row) or a
+    sequence of them (one independent draw per row); `paced_cycles`
+    spreads each row's demand over that many cycle starts instead of
+    offering it all at t=0 — the sustained-load mode the dynamic
+    Fig. 11 throughput-retention columns measure.  Both route through
+    one faulted lowering per design point; when neither is set the
+    original failure-free program runs untouched.
     """
     demands = np.asarray(demands, np.float64)  # staticcheck: ok SC-AST-F64 (host staging)
     if demands.ndim == 2:
@@ -161,7 +313,32 @@ def simulate_rotor_bulk_batch(
 
     adj = jnp.asarray(topo.matching_tensor(), dtype)
     own0 = jnp.asarray(demands / cap, dtype)
-    done_t, wire_t, residual = _run_batch(adj, own0, bool(vlb), int(max_cycles))
+    blackholed = None
+    if _faults_all_empty(faults) and not paced_cycles:
+        done_t, wire_t, residual = _run_batch(
+            adj, own0, bool(vlb), int(max_cycles))
+    else:
+        from repro.netsim.faults import (
+            FailureSchedule,
+            FaultMasks,
+            compile_fault_masks,
+        )
+
+        if faults is None:
+            faults = FailureSchedule.empty(topo)
+        masks = (faults if isinstance(faults, FaultMasks)
+                 else compile_fault_masks(topo, faults))
+        masks = masks.broadcast_to(demands.shape[0])
+        sw = jnp.asarray(masks.switch_id)
+        done_t, wire_t, residual, blackholed = _run_batch_faulted(
+            adj, sw, jnp.asarray(masks.pair_switch), own0,
+            jnp.asarray(masks.up_onset), jnp.asarray(masks.up_detect),
+            jnp.asarray(masks.up_recover),
+            jnp.asarray(masks.tor_onset), jnp.asarray(masks.tor_detect),
+            jnp.asarray(masks.tor_recover),
+            bool(vlb), int(max_cycles), int(paced_cycles),
+        )
+        blackholed = np.asarray(blackholed, np.float64) * cap  # staticcheck: ok SC-AST-F64 (host staging)
 
     # Device f32 trajectories are de-normalized on the host at float64
     # before stats, mirroring the numpy oracle's precision.
@@ -205,6 +382,7 @@ def simulate_rotor_bulk_batch(
         residual_bytes=residual,
         total_bytes=totals,
         slices_run=slices_run,
+        blackholed_bytes=blackholed,
     )
 
 
@@ -215,10 +393,13 @@ def simulate_rotor_bulk_jax(
     max_cycles: int = 400,
     topo: Optional[OperaTopology] = None,
     seed: int = 0,
+    faults=None,
+    paced_cycles: int = 0,
 ) -> RotorFluidResult:
     """Drop-in single-scenario API (batch of one) matching
     `fluid.simulate_rotor_bulk`'s signature and result type."""
     r = simulate_rotor_bulk_batch(
-        cfg, demand, vlb=vlb, max_cycles=max_cycles, topo=topo, seed=seed
+        cfg, demand, vlb=vlb, max_cycles=max_cycles, topo=topo, seed=seed,
+        faults=faults, paced_cycles=paced_cycles,
     )
     return r.scenario(0)

@@ -15,7 +15,12 @@ SC-AST-TRIO      every kernel package under ``kernels/`` ships the full
                  ``kernel.py`` / ``ops.py`` / ``ref.py`` trio.
 SC-AST-LOCKSTEP  oracle<->JAX engine pairs must change together in a
                  diff (``git diff --name-only``): fluid.py<->fluid_jax.py,
-                 flows.py<->flows_jax.py.
+                 flows.py<->flows_jax.py.  A diff touching
+                 ``netsim/faults.py`` carries failure *semantics* (the
+                 per-step mask/window math both members of each pair
+                 mirror), so it must touch both members of each pair
+                 too — or neither gets a pass: an untouched pair under a
+                 faults.py diff is flagged for review.
 """
 from __future__ import annotations
 
@@ -35,6 +40,11 @@ LOCKSTEP_PAIRS: Tuple[Tuple[str, str], ...] = (
     ("src/repro/netsim/fluid.py", "src/repro/netsim/fluid_jax.py"),
     ("src/repro/netsim/flows.py", "src/repro/netsim/flows_jax.py"),
 )
+# failure-semantics module: its per-step mask/window math is mirrored
+# inside every member of LOCKSTEP_PAIRS (faults.step_masks <->
+# fluid_jax._slice_step_faulted, apply_flow_faults windows <-> both
+# flow engines), so a diff touching it couples to every pair
+FAULTS_MODULE = "src/repro/netsim/faults.py"
 
 
 def iter_py_files(root: str, dirs: Sequence[str] = SCAN_DIRS) -> Iterable[str]:
@@ -180,6 +190,7 @@ def check_lockstep(changed_files: Sequence[str]) -> List[Finding]:
     """SC-AST-LOCKSTEP over a diff file list."""
     changed = {f.replace(os.sep, "/") for f in changed_files}
     out: List[Finding] = []
+    faulted = FAULTS_MODULE in changed
     for a, b in LOCKSTEP_PAIRS:
         in_a, in_b = a in changed, b in changed
         if in_a != in_b:
@@ -190,6 +201,14 @@ def check_lockstep(changed_files: Sequence[str]) -> List[Finding]:
                 "oracle and JAX engine share per-step math; change them "
                 "together (ROADMAP Architecture notes)",
                 path=lone, severity=WARNING))
+        elif faulted and not in_a:
+            out.append(Finding(
+                "SC-AST-LOCKSTEP",
+                f"{FAULTS_MODULE} changed but neither {a} nor {b} did — "
+                "failure semantics (per-step masks / fault windows) are "
+                "mirrored inside both engines; touch both pair members "
+                "or confirm the diff is schedule-plumbing only",
+                path=FAULTS_MODULE, severity=WARNING))
     return out
 
 

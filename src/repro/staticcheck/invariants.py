@@ -25,6 +25,13 @@ SC-INV-RECONF  consecutive slices (cyclically) differ in at most
 SC-INV-FABRIC  the static comparison fabrics (`expander_union`,
                `random_regular_expander`) are symmetric, self-map-free,
                connected, and meet the same spectral bound.
+SC-INV-FAULT   fault-masked capacity tensors (`netsim.faults.
+               masked_tensor`) stay symmetric and never add capacity
+               beyond the live fabric, a seeded link draw really removes
+               realized uplinks, and every slice stays connected under
+               every combination of up to ``switch_fault_tolerance``
+               failed circuit switches — the Fig. 11c budget the
+               realization was selected for.
 
 All checks return ``Finding`` lists; ``verify_topology`` bundles the
 four topology rules.  Tests inject corrupted tensors via the
@@ -210,6 +217,78 @@ def verify_topology(
     out += check_cycle_coverage(topo, ten, config)
     out += check_expander(topo, ten, config)
     out += check_reconfiguration(topo, ten, config)
+    return out
+
+
+def check_fault_masks(
+    topo: OperaTopology,
+    budget: int = 0,
+    seed: int = 0,
+    link_frac: float = 0.04,
+    config: InvariantConfig = InvariantConfig(),
+    tensor: Optional[np.ndarray] = None,
+) -> List[Finding]:
+    """SC-INV-FAULT: fault-masked tensors are well-formed; the realization
+    survives its declared switch-fault budget.
+
+    Verifies two artifacts of `netsim.faults.masked_tensor`:
+
+    * a seeded link-failure draw (`FailureSchedule.draw`) must yield
+      per-slice tensors that are symmetric, a *subset* of the live fabric
+      (masking only ever removes capacity), and strictly smaller than it
+      (the sampler hit realized uplinks, not non-edges);
+    * every combination of up to ``budget`` failed circuit switches must
+      leave every checked slice connected — the `switch_fault_tolerance`
+      property the design-time generate-and-test loop (§3.3) selected
+      the realization for, re-verified here on the exported artifact.
+    """
+    import itertools
+
+    from repro.netsim.faults import (
+        FailureEvent,
+        FailureSchedule,
+        masked_tensor,
+    )
+
+    out: List[Finding] = []
+    base = _tensor(topo, tensor)
+
+    def bad(msg: str, path: str) -> None:
+        out.append(Finding("SC-INV-FAULT", msg, path=path))
+
+    draw = FailureSchedule.draw(topo, seed=seed, link_frac=link_frac,
+                                onset_step=0, detect_lag=0)
+    masked = masked_tensor(topo, draw, tensor=base)
+    removed = 0
+    for t in _slices(topo, config):
+        sl = masked[t]
+        if not np.array_equal(sl, sl.T):
+            bad(f"slice {t}: fault-masked tensor not symmetric",
+                f"masked[{t}]")
+        extra = (sl != 0) & (base[t] == 0)
+        if extra.any():
+            bad(f"slice {t}: mask added {int(extra.sum())} edges outside "
+                "the live fabric", f"masked[{t}]")
+        removed += int(((base[t] != 0) & (sl == 0)).sum())
+    if removed == 0:
+        bad(f"link draw (seed={seed}, frac={link_frac}) removed no "
+            "capacity — the sampler missed the realized uplinks",
+            "link-draw")
+
+    for k in range(1, budget + 1):
+        for combo in itertools.combinations(range(topo.num_switches), k):
+            sched = FailureSchedule(
+                num_racks=topo.num_racks,
+                num_switches=topo.num_switches,
+                events=(FailureEvent("switch", combo, onset_step=0,
+                                     detect_lag=0),))
+            m = masked_tensor(topo, sched, tensor=base)
+            for t in _slices(topo, config):
+                if not _connected(m[t] != 0):
+                    bad(f"slice {t} disconnects under switch failures "
+                        f"{combo} — inside the declared fault budget "
+                        f"{budget}", f"switches{combo}")
+                    break   # one finding per combo is enough
     return out
 
 

@@ -15,11 +15,17 @@ SC-JAX-CALLBACK   a host callback primitive (pure_callback/io_callback/
 SC-JAX-RECOMPILE  the sweep grid compiles more than once per design
                   point: `netsim/sweep.py` must reuse one lowering of
                   `fluid_jax._run_batch` per (k, num_racks, groups)
-                  shape, never one per load/seed scenario.
+                  shape, never one per load/seed scenario.  The fault
+                  path has the same contract (`count_fault_lowerings`):
+                  failure timelines are int32 *data* operands of
+                  `_run_batch_faulted`, so distinct failure draws must
+                  never trigger fresh lowerings.
 
-Traced entry points: ``fluid_jax._run_batch`` (the device program under
-``simulate_rotor_bulk_batch``), ``flows_jax._run_batch`` (under
-``simulate_grid``), and the four Pallas kernel ``ops`` wrappers.
+Traced entry points: ``fluid_jax._run_batch`` / ``_run_batch_faulted``
+(the device programs under ``simulate_rotor_bulk_batch``),
+``flows_jax._run_batch`` / ``_run_batch_faulted`` (under
+``simulate_grid`` / ``simulate_flows_batch``), and the four Pallas
+kernel ``ops`` wrappers.
 """
 from __future__ import annotations
 
@@ -80,12 +86,37 @@ def _entry_specs() -> List[Tuple[str, Callable, Callable]]:
             lambda: (sd((6, 8, 8)), sd((2, 8, 8))),
         ),
         (
+            "netsim.fluid_jax._run_batch_faulted",
+            lambda *a: fluid_jax._run_batch_faulted(*a, True, 3, 0),
+            lambda: (
+                sd((6, 8, 8)), sd((6, 8, 8), jnp.int32),
+                sd((8, 8), jnp.int32), sd((2, 8, 8)),
+                sd((2, 8, 3), jnp.int32), sd((2, 8, 3), jnp.int32),
+                sd((2, 8, 3), jnp.int32),
+                sd((2, 8), jnp.int32), sd((2, 8), jnp.int32),
+                sd((2, 8), jnp.int32),
+            ),
+        ),
+        (
             "netsim.flows_jax._run_batch",
             lambda *a: flows_jax._run_batch(*a, num_steps=7, trace=False),
             lambda: (
                 sd((2, 5)), sd((2, 5), jnp.int32), sd((2, 5), jnp.bool_),
                 sd((2,)), sd((2,)), sd((2, 5)), sd((2, 5)),
                 sd((2,), jnp.int32), sd((2,), jnp.int32),
+            ),
+        ),
+        (
+            "netsim.flows_jax._run_batch_faulted",
+            lambda *a: flows_jax._run_batch_faulted(*a, num_steps=7,
+                                                    trace=False),
+            lambda: (
+                sd((2, 5)), sd((2, 5), jnp.int32), sd((2, 5), jnp.bool_),
+                sd((2,)), sd((2,)), sd((2, 5)), sd((2, 5)),
+                sd((2,), jnp.int32), sd((2,), jnp.int32),
+                sd((2, 5), jnp.int32), sd((2, 5), jnp.int32),
+                sd((2, 5), jnp.int32), sd((2, 5), jnp.int32),
+                sd((2, 7)), sd((2, 7)),
             ),
         ),
         (
@@ -240,3 +271,44 @@ def count_sweep_lowerings(
             "shape, not per load/seed",
             path=path, line=line))
     return new, len(designs), findings
+
+
+def count_fault_lowerings(
+    num_draws: int = 2, max_cycles: int = 6,
+) -> Tuple[int, List[Finding]]:
+    """SC-JAX-RECOMPILE for the fault path: failure timelines are int32
+    *data* operands of `fluid_jax._run_batch_faulted` (the per-step 0/1
+    masks are rebuilt inside the scan from the global step counter), so
+    running several distinct failure draws through one design point must
+    add at most one fresh lowering — zero once warm.
+
+    Returns (new_lowerings, findings)."""
+    import numpy as np
+
+    from repro.core.topology import build_opera_topology
+    from repro.netsim import fluid_jax
+    from repro.netsim.faults import FailureSchedule
+    from repro.netsim.sweep import DesignPoint
+
+    topo = build_opera_topology(8, 2, seed=0)
+    cfg = DesignPoint(k=4, num_racks=8).to_config()
+    demand = np.full((8, 8), 1e6)
+    np.fill_diagonal(demand, 0.0)
+    before = fluid_jax._run_batch_faulted._cache_size()
+    for seed in range(num_draws):
+        sched = FailureSchedule.draw(
+            topo, seed=seed, link_frac=0.1, switch_count=1, onset_step=2)
+        fluid_jax.simulate_rotor_bulk_batch(
+            cfg, demand[None], topo=topo, max_cycles=max_cycles,
+            faults=[sched])
+    new = fluid_jax._run_batch_faulted._cache_size() - before
+    path, line = _src_location(fluid_jax._run_batch_faulted)
+    findings: List[Finding] = []
+    if new > 1:
+        findings.append(Finding(
+            "SC-JAX-RECOMPILE",
+            f"{num_draws} failure draws through one design point compiled "
+            f"{new} `_run_batch_faulted` lowerings — fault masks are data; "
+            "the engine must lower once per design point, never per draw",
+            path=path, line=line))
+    return new, findings

@@ -17,6 +17,7 @@ from repro.staticcheck.invariants import (
     InvariantConfig,
     check_cycle_coverage,
     check_expander,
+    check_fault_masks,
     check_matching_union,
     check_reconfiguration,
     check_static_fabric,
@@ -157,6 +158,43 @@ class TestCorruptedTopologies:
 
 
 # ---------------------------------------------------------------------------
+# Layer 1: SC-INV-FAULT — fault-masked tensors + switch-fault budget
+# ---------------------------------------------------------------------------
+
+
+class TestFaultInvariant:
+    def test_clean_on_budget_selected_realization(self):
+        # n12-u6 converges instantly in the generate-and-test loop and
+        # genuinely survives any 2 switch failures in every slice
+        ft = build_opera_topology(12, 6, seed=0, switch_fault_tolerance=2)
+        assert check_fault_masks(ft, budget=2) == []
+
+    def test_fires_on_unselected_realization(self):
+        # plain 16-rack u=4 seed-0 build: single-switch failures leave
+        # 2-matching slices that fall apart into disjoint cycles
+        topo = build_opera_topology(16, 4, seed=0)
+        found = check_fault_masks(topo, budget=1)
+        assert "SC-INV-FAULT" in rules(found)
+        assert any("disconnects under switch failures" in f.message
+                   for f in found)
+
+    def test_fires_on_asymmetric_masked_tensor(self, topo, tensor):
+        bad = tensor.copy()
+        n = topo.num_racks
+        off_zero = np.argwhere((bad[0] == 0) & ~np.eye(n, dtype=bool))
+        i, j = off_zero[0]
+        bad[0, i, j] = 1.0            # survives masking -> masked asym
+        found = check_fault_masks(topo, tensor=bad)
+        assert any("not symmetric" in f.message for f in found)
+
+    def test_fires_when_draw_removes_nothing(self, topo):
+        # an all-zero tensor has no capacity for the link draw to remove
+        zero = np.zeros_like(topo.matching_tensor())
+        found = check_fault_masks(topo, tensor=zero)
+        assert any("removed no" in f.message for f in found)
+
+
+# ---------------------------------------------------------------------------
 # Layer 2b: AST rules
 # ---------------------------------------------------------------------------
 
@@ -255,6 +293,26 @@ class TestAstRules:
         unrelated = check_lockstep(["ROADMAP.md", "src/repro/compat.py"])
         assert unrelated == []
 
+    def test_lockstep_faults_coupling(self):
+        """A faults.py diff is a failure-semantics diff: every engine
+        pair must be touched (both members), else the pair is flagged."""
+        from repro.staticcheck.ast_rules import check_lockstep
+
+        alone = check_lockstep(["src/repro/netsim/faults.py"])
+        assert len(alone) == 2          # one finding per untouched pair
+        assert rules(alone) == {"SC-AST-LOCKSTEP"}
+        assert all("failure semantics" in f.message for f in alone)
+        half = check_lockstep(["src/repro/netsim/faults.py",
+                               "src/repro/netsim/fluid.py"])
+        # fluid pair: half-touched (base rule); flows pair: untouched
+        assert len(half) == 2
+        full = check_lockstep(["src/repro/netsim/faults.py",
+                               "src/repro/netsim/fluid.py",
+                               "src/repro/netsim/fluid_jax.py",
+                               "src/repro/netsim/flows.py",
+                               "src/repro/netsim/flows_jax.py"])
+        assert full == []
+
     def test_whole_tree_is_clean(self):
         """Tier-1 gate: the repo itself passes every AST policy rule."""
         from repro.staticcheck.ast_rules import scan_tree
@@ -279,8 +337,10 @@ class TestJaxprRules:
 
     def test_all_entrypoints_trace(self, entries):
         names = {e.name for e in entries}
-        assert len(names) == 6
+        assert len(names) == 8
         assert any("fluid_jax" in n for n in names)
+        assert "netsim.fluid_jax._run_batch_faulted" in names
+        assert "netsim.flows_jax._run_batch_faulted" in names
         assert any("flash_attention" in n for n in names)
 
     def test_engines_have_no_f64_or_callbacks(self, entries):
@@ -339,6 +399,19 @@ class TestRecompilePinning:
         # same design shapes, fresh loads/seeds: zero new lowerings
         new2, _, findings2 = count_sweep_lowerings(
             designs=designs, loads=(0.15, 0.3), seeds=(2, 3), max_cycles=8)
+        assert findings2 == []
+        assert new2 == 0
+
+    def test_fault_draws_share_one_lowering(self):
+        """Failure timelines are data: distinct draws through one design
+        point must add at most one `_run_batch_faulted` lowering, and a
+        re-run with fresh draws must add none."""
+        from repro.staticcheck.jaxpr_rules import count_fault_lowerings
+
+        new, findings = count_fault_lowerings(num_draws=3, max_cycles=5)
+        assert findings == []
+        assert new <= 1
+        new2, findings2 = count_fault_lowerings(num_draws=2, max_cycles=5)
         assert findings2 == []
         assert new2 == 0
 
