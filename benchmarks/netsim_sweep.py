@@ -13,6 +13,14 @@ import time
 from benchmarks.common import banner, check, save
 from repro.netsim.sweep import DesignPoint, SweepSpec, run_sweep, summarize
 
+# The Appendix-B scale point the dense engine never swept: k = 32 means a
+# (num_slices, N, N) matching tensor of ~320 MB, while the sparse
+# engine's (num_slices, N, u) index form is ~11 MB.  Few cycles: the
+# point of this stage is grid *reach* (topology lift + sparse engine at
+# N = 432), not completion; conservation is the invariant checked.
+BIG_POINT = DesignPoint(k=32, num_racks=432, groups=1)
+BIG_CYCLES = 4
+
 
 def run() -> dict:
     banner("Scenario sweep — batched fluid engine over a design grid")
@@ -61,9 +69,40 @@ def run() -> dict:
         grouped[0]["cycle_ms"] < 0.6 * ungrouped[0]["cycle_ms"],
         f"{grouped[0]['cycle_ms']:.2f} vs {ungrouped[0]['cycle_ms']:.2f} ms",
     )
+
+    banner(f"Appendix-B scale point {BIG_POINT.name} — sparse engine")
+    big_spec = SweepSpec(
+        designs=(BIG_POINT,),
+        workloads=("permutation",),
+        loads=(0.3,),
+        seeds=(0,),
+        max_cycles=BIG_CYCLES,
+        engine="sparse",
+    )
+    t0 = time.time()
+    big_rows, big_res = [], None
+    for dp in big_spec.designs:
+        from repro.netsim.sweep import run_design
+        r, big_res = run_design(big_spec, dp)
+        big_rows.extend(r)
+    big_dt = time.time() - t0
+    for r in big_rows:
+        print(f"  {r['design']:14s} {r['workload']:11s} "
+              f"fin={r['finished_frac']:.3f} tax={r['bandwidth_tax']:.2f} "
+              f"({big_dt:.1f}s, {r['slices_run']} slices)")
+    import numpy as np
+    conserved = float(np.max(np.abs(
+        big_res.goodput_bytes + big_res.residual_bytes - big_res.total_bytes
+    ) / big_res.total_bytes))
+    ok6 = check(f"k>=32 sparse point conserves bytes ({BIG_POINT.name})",
+                conserved < 1e-4, f"rel err {conserved:.2e}")
+    ok7 = check("k>=32 sparse point makes forward progress",
+                all(r["finished_frac"] > 0.1 for r in big_rows))
     return dict(rows=rows, summary=summary, wall_s=dt,
+                big_rows=big_rows, big_wall_s=big_dt,
                 checks=dict(batch=ok1, finished=ok2, tax=ok3, monotone=ok4,
-                            groups=ok5))
+                            groups=ok5, big_conserved=ok6,
+                            big_progress=ok7))
 
 
 if __name__ == "__main__":

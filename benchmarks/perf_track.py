@@ -1,0 +1,229 @@
+"""PR-over-PR step-time tracking: dense vs permutation-sparse engine.
+
+Measures the median per-step, per-scenario wall time of both fluid
+engines at representative Appendix-B design points — the two paper-table
+fabrics (k8-n16, k12-n108 at both group counts) and one k >= 32 point
+the dense path never covered — and records them into the root-level
+``BENCH_netsim.json`` with an append-only history keyed by commit, so
+regressions in either engine show up as a diff in review.
+
+Both engines run *truncated* slice sets (``SLICES_MEASURED`` steps) on
+identical demand batches: step time is shape-stationary across a run, so
+a short prefix measures the same thing as a full sweep while keeping the
+dense (S, N, N) adjacency tractable at N = 432 (the full 432-slice
+tensor is ~320 MB; 16 slices are ~12).  The truncated dense adjacency is
+rebuilt from the index tensor rather than `matching_tensor()` for the
+same reason.
+
+``--fast`` skips timing entirely and runs the sparse-vs-dense parity
+gate (full engine runs at the two small points, faulted and unfaulted)
+— the mode `scripts/ci_tier1.sh` wires in; exits nonzero on drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import banner, check, save
+from repro.netsim.sweep import DesignPoint
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_PATH = REPO_ROOT / "BENCH_netsim.json"
+
+POINTS = (
+    DesignPoint(k=8, num_racks=16, groups=1),
+    DesignPoint(k=12, num_racks=108, groups=1),
+    DesignPoint(k=12, num_racks=108, groups=2),
+    DesignPoint(k=32, num_racks=432, groups=1),
+    DesignPoint(k=32, num_racks=512, groups=2),
+)
+BATCH = 4
+SLICES_MEASURED = 16
+REPEATS = 7
+# acceptance bar: at N >= this, sparse must beat dense by SPEEDUP_MIN
+SPEEDUP_AT_RACKS = 432
+SPEEDUP_MIN = 2.0
+
+
+def _build_point(dp: DesignPoint):
+    """Topology + truncated index/dense slice tensors + a demand batch."""
+    from repro.core.topology import (
+        build_lifted_opera_topology,
+        build_opera_topology,
+    )
+    from repro.netsim.sweep import LIFTED_TOPO_RACKS, scenario_demand
+
+    cfg = dp.to_config()
+    if cfg.num_racks > LIFTED_TOPO_RACKS:
+        topo = build_lifted_opera_topology(
+            cfg.num_racks, cfg.u, seed=dp.topo_seed, groups=cfg.groups)
+    else:
+        topo = build_opera_topology(
+            cfg.num_racks, cfg.u, seed=dp.topo_seed, groups=cfg.groups)
+    s = min(SLICES_MEASURED, topo.num_slices)
+    dst = topo.matching_index_tensor()[:s]            # (s, N, u)
+    n = cfg.num_racks
+    adj = np.zeros((s, n, n), np.float32)
+    t_idx, i_idx, s_idx = np.nonzero(dst < n)
+    adj[t_idx, i_idx, dst[t_idx, i_idx, s_idx]] = 1.0
+    demands = np.stack([
+        scenario_demand("permutation", cfg, 0.3, seed) for seed in range(BATCH)
+    ])
+    return cfg, dst, adj, demands
+
+
+def measure_point(dp: DesignPoint) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core.schedule import cycle_timing, slice_capacity_bytes
+    from repro.netsim.fluid_jax import _run_batch, _run_batch_sparse
+
+    cfg, dst, adj, demands = _build_point(dp)
+    cap = slice_capacity_bytes(cfg, cycle_timing(cfg))
+    own0 = jnp.asarray(demands / cap, jnp.float32)
+    adj_j = jnp.asarray(adj)
+    dst_j = jnp.asarray(dst)
+    s = dst.shape[0]
+
+    def run_dense():
+        _run_batch(adj_j, own0, True, 1)[2].block_until_ready()
+
+    def run_sparse():
+        _run_batch_sparse(dst_j, own0, True, 1)[2].block_until_ready()
+
+    # Interleave the two engines within each round so clock drift and
+    # cache/allocator state hit both equally; the speedup is the median
+    # of per-round ratios, not a ratio of medians.
+    run_dense(), run_sparse()              # warmup / compile
+    dense_t, sparse_t = [], []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        run_dense()
+        dense_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_sparse()
+        sparse_t.append(time.perf_counter() - t0)
+    scale = 1e6 / s / BATCH
+    ratios = [d / sp for d, sp in zip(dense_t, sparse_t)]
+    return dict(
+        num_racks=dp.num_racks, k=dp.k, groups=dp.groups,
+        slices_measured=s, batch=BATCH,
+        dense_us=round(float(np.median(dense_t)) * scale, 1),
+        sparse_us=round(float(np.median(sparse_t)) * scale, 1),
+        speedup=round(float(np.median(ratios)), 2),
+    )
+
+
+def _git_head() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def _record(points: dict) -> dict:
+    doc = dict(updated="", points={}, history=[])
+    if BENCH_PATH.exists():
+        try:
+            doc = json.loads(BENCH_PATH.read_text())
+        except json.JSONDecodeError:
+            pass
+    stamp = time.strftime("%Y-%m-%d")
+    doc["updated"] = stamp
+    doc["points"] = points
+    doc.setdefault("history", []).append(
+        dict(commit=_git_head(), date=stamp, points=points))
+    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    return doc
+
+
+def parity_gate(tol: float = 1e-5) -> bool:
+    """Full-engine sparse-vs-dense agreement at the small paper points,
+    faulted and unfaulted — the CI drift gate."""
+    from repro.core.topology import build_opera_topology
+    from repro.netsim.faults import FailureEvent, FailureSchedule
+    from repro.netsim.fluid_jax import simulate_rotor_bulk_batch
+    from repro.netsim.sweep import scenario_demand
+
+    ok = True
+    for dp in (DesignPoint(k=8, num_racks=16, groups=1),
+               DesignPoint(k=8, num_racks=16, groups=2)):
+        cfg = dp.to_config()
+        topo = build_opera_topology(
+            cfg.num_racks, cfg.u, seed=0, groups=cfg.groups)
+        # overloaded skew: the run must NOT complete, so residual / wire
+        # trajectories exercise the VLB spread math, not just the totals
+        demands = np.stack([
+            scenario_demand("skew", cfg, 2.5, s) for s in range(2)])
+        faults = FailureSchedule(
+            num_racks=cfg.num_racks, num_switches=cfg.u,
+            events=(FailureEvent("link", ((1, 0),), onset_step=1,
+                                 detect_lag=2, recover_step=9),
+                    FailureEvent("tor", (3,), onset_step=2,
+                                 detect_lag=1, recover_step=11)))
+        for fs in (None, faults):
+            res = {}
+            for engine in ("dense", "sparse"):
+                res[engine] = simulate_rotor_bulk_batch(
+                    cfg, demands, vlb=True, max_cycles=8, topo=topo,
+                    faults=fs, engine=engine)
+            for field in ("goodput_bytes", "wire_bytes", "residual_bytes"):
+                a = getattr(res["dense"], field)
+                b = getattr(res["sparse"], field)
+                drift = float(np.max(
+                    np.abs(a - b) / np.maximum(np.abs(a), 1.0)))
+                ok &= check(
+                    f"{dp.name} {'faulted' if fs else 'clean'} {field} "
+                    f"drift < {tol}", drift < tol, f"{drift:.2e}")
+    return ok
+
+
+def run(fast: bool = False) -> dict:
+    banner("Engine perf tracking — dense vs permutation-sparse step time")
+    if fast:
+        ok = parity_gate()
+        return dict(mode="fast", checks=dict(parity=ok))
+
+    points = {}
+    for dp in POINTS:
+        r = measure_point(dp)
+        points[dp.name] = r
+        print(f"  {dp.name:14s} dense={r['dense_us']:8.1f} us/step/scn  "
+              f"sparse={r['sparse_us']:8.1f}  speedup={r['speedup']:.2f}x")
+    doc = _record(points)
+    print(f"  recorded -> {BENCH_PATH.relative_to(REPO_ROOT)} "
+          f"(history: {len(doc['history'])} entries)")
+
+    big = [r for r in points.values() if r["num_racks"] >= SPEEDUP_AT_RACKS]
+    ok_speed = check(
+        f"sparse >= {SPEEDUP_MIN}x dense at N >= {SPEEDUP_AT_RACKS}",
+        bool(big) and all(r["speedup"] >= SPEEDUP_MIN for r in big),
+        ", ".join(f"N={r['num_racks']}: {r['speedup']:.2f}x" for r in big))
+    ok_parity = parity_gate()
+    return dict(points=points, checks=dict(speedup=ok_speed,
+                                           parity=ok_parity))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="parity gate only, no timing (CI mode)")
+    args = ap.parse_args(argv)
+    out = run(fast=args.fast)
+    if not args.fast:
+        save("perf_track", out)
+    if not all(out["checks"].values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ MODULES = [
     ("fig11_faults", "benchmarks.fig11_faults"),
     ("fig12_cost", "benchmarks.fig12_cost"),
     ("netsim_sweep", "benchmarks.netsim_sweep"),
+    ("perf_track", "benchmarks.perf_track"),
     ("table1_appD", "benchmarks.table1_appD"),
     ("bench_rotor_collectives", "benchmarks.bench_rotor_collectives"),
     ("bench_roofline", "benchmarks.bench_roofline"),

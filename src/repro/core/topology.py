@@ -297,6 +297,31 @@ class OperaTopology:
             [self.adjacency(t) for t in range(self.num_slices)]
         ).astype(np.float32)
 
+    def matching_index_tensor(self) -> np.ndarray:
+        """Permutation-sparse export of the whole cycle for array engines.
+
+        Returns a ``(num_slices, N, u)`` int32 tensor: entry ``[t, i, s]``
+        is the rack that switch s connects rack i to during slice t, or
+        the sentinel ``N`` when the slot is dark — switch s reconfiguring
+        during slice t (grouped reconfiguration darkens `groups` columns
+        per slice) or the matching holding a self-loop at i.  Because
+        every live matching is an involution, ``dst[dst[i, s], s] == i``
+        for every non-sentinel entry, and scattering ones along
+        ``(i, dst[i, s])`` reconstructs `matching_tensor()` exactly.
+        This is the design-time artifact the sparse engine
+        (netsim/fluid_jax.py + kernels/rotor_slice) gathers over — it is
+        u/N times the dense tensor's footprint, which is what makes the
+        k >= 32 Appendix-B points tractable.
+        """
+        n, u = self.num_racks, self.num_switches
+        out = np.full((self.num_slices, n, u), n, dtype=np.int32)
+        i = np.arange(n)
+        for t in range(self.num_slices):
+            for s, p in self.live_matchings(t):
+                live = p != i
+                out[t, i[live], s] = p[live]
+        return out
+
     def direct_slice(self) -> np.ndarray:
         """direct[i, j] = first slice in which i-j have a direct circuit.
 
@@ -359,6 +384,48 @@ def build_opera_topology(
         if not verify_slices or _slices_robust(topo, switch_fault_tolerance):
             return topo
     return last  # best effort (tests check connectivity explicitly)
+
+
+def build_lifted_opera_topology(
+    num_racks: int,
+    num_switches: int,
+    seed: int = 0,
+    groups: int = 1,
+    max_base: int = 128,
+    verify_slices: bool = False,
+) -> OperaTopology:
+    """Large Appendix-B design points via graph lifting (§3.3).
+
+    Factoring K_N directly is quadratic-with-a-big-constant in N; the
+    paper grows big instances by lifting a small base factorization
+    instead.  Picks the smallest lift factor f dividing num_racks whose
+    base num_racks/f is even, >= 2*num_switches, and <= max_base (the
+    largest base that is still cheap to factor), then lifts
+    `random_matchings(base)`.  Slice verification defaults off: the
+    generate-and-test loop rebuilds the (large) slice set per attempt,
+    and the invariant layer (`repro.staticcheck`) is the place big
+    points get audited.
+    """
+    base_n = num_racks
+    factor = 1
+    if num_racks > max_base:
+        for f in range(2, num_racks // max(2 * num_switches, 2) + 1):
+            if num_racks % f:
+                continue
+            b = num_racks // f
+            if b % 2 == 0 and b >= 2 * num_switches and b <= max_base:
+                base_n, factor = b, f
+                break
+        else:
+            raise ValueError(
+                f"no lift base for N={num_racks}, u={num_switches} "
+                f"with max_base={max_base}")
+    base = random_matchings(base_n, seed)
+    matchings = lift_matchings(base, factor) if factor > 1 else base
+    return build_opera_topology(
+        num_racks, num_switches, seed=seed, groups=groups,
+        base_matchings=matchings, verify_slices=verify_slices,
+    )
 
 
 def _connected(adj: np.ndarray) -> bool:

@@ -1,3 +1,22 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from __future__ import annotations
+
+from typing import Optional
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Shared backend auto-detection for every kernel's `ops.py` wrapper.
+
+    `None` (the default everywhere) means "Pallas-compile on TPU,
+    interpret elsewhere" — the repo's kernels are Mosaic-TPU kernels,
+    and interpret mode is the supported CPU/GPU execution path.  An
+    explicit bool is passed through, so tests can force interpretation
+    on any backend.
+    """
+    if interpret is None:
+        import jax
+
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 
 
@@ -30,8 +31,7 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     B, Hq, Sq, hd = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     g = Hq // Hkv

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.mamba_scan.kernel import mamba_scan_fwd
 
 
@@ -30,8 +31,7 @@ def mamba_scan(
     block_s: int = 64,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     bd = _pick(x.shape[2], block_d)
     bs = _pick(x.shape[1], block_s)
     return mamba_scan_fwd(x, dt, Bm, Cm, A, D, block_d=bd, block_s=bs,

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.moe_gmm.kernel import moe_gmm_fwd
 
 
@@ -26,8 +27,7 @@ def moe_gmm(
     block_f: int = 256,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     bc = _pick(h.shape[1], block_c)
     bf = _pick(wg.shape[2], block_f)
     return moe_gmm_fwd(h, wg, wu, wd, block_c=bc, block_f=bf,

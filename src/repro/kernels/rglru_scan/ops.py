@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.rglru_scan.kernel import rglru_scan_fwd
 
 
@@ -25,8 +26,7 @@ def rglru_scan(
     block_s: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     bd = _pick(a.shape[2], block_d)
     bs = _pick(a.shape[1], block_s)
     return rglru_scan_fwd(a, bx, h0, block_d=bd, block_s=bs,

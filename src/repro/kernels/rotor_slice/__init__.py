@@ -1,0 +1,1 @@
+from repro.kernels.rotor_slice.ops import rotor_slice_step  # noqa: F401

@@ -1,0 +1,118 @@
+"""Pallas permutation-sparse rotor slice step.
+
+Grid (B / block_b,): the vmapped scenario batch rides the Pallas grid,
+one (block_b, N, N) state tile per cell; the (N, u) destination-index
+tensor (`OperaTopology.matching_index_tensor()` slice, sentinel N for
+dark slots) is broadcast to every cell.  The body is the edge-layout
+math of `ref.rotor_slice_ref` — gathers into (block_b, N, u), compare-
+select chains instead of scatters (see ref.py for why both are exact) —
+so one cell does O(N·(N + u)) work where the dense engine's relay
+matmul does O(N²·u).
+
+`ops.py` picks block_b per backend: one scenario per cell on TPU (each
+tile fits VMEM up to N ≈ 1k f32), the whole batch in a single cell
+under interpretation — XLA CPU executes consecutive grid steps of one
+program several-fold slower than the same body as one fused block (the
+measured multi-step pathology that also rules out `lax.scan` driving;
+see fluid_jax._run_batch_sparse).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_edges(dense, dst, vals, iota):
+    """dense[b, i, dst[i, s]] += vals[b, i, s] as a nested select tree
+    (slots are disjoint, see ref.apply_edges); the sentinel never
+    matches the iota so dark slots add exactly 0."""
+    acc = None
+    for s in range(dst.shape[1]):
+        hit = (dst[:, s:s + 1] == iota[None, :])[None]
+        v = vals[:, :, s:s + 1]
+        acc = jnp.where(hit, v, 0.0) if acc is None else jnp.where(hit, v, acc)
+    return dense + acc
+
+
+def _kernel(dst_ref, own_ref, relay_ref,
+            own_o, relay_o, deliv_o, moved_o, *, vlb: bool):
+    own = own_ref[...]          # (block_b, N, N)
+    relay = relay_ref[...]
+    dst = dst_ref[...]          # (N, u)
+    bsz, n = own.shape[0], own.shape[1]
+    u = dst.shape[1]
+    iota = jnp.arange(n, dtype=dst.dtype)
+    valid = dst < n
+    dstc = jnp.where(valid, dst, 0)
+    vf = valid.astype(own.dtype)[None]
+    idx = jnp.broadcast_to(dstc[None], (bsz, n, u))
+
+    own_e = jnp.take_along_axis(own, idx, axis=2) * vf
+    send_own_e = jnp.minimum(own_e, vf)
+    room_e = vf - send_own_e
+    relay_e = jnp.take_along_axis(relay, idx, axis=2) * vf
+    send_relay_e = jnp.minimum(relay_e, room_e)
+    room_e = room_e - send_relay_e
+    delivered = send_own_e.sum((1, 2)) + send_relay_e.sum((1, 2))
+
+    own = _apply_edges(own, dst, -send_own_e, iota)
+    relay = _apply_edges(relay, dst, -send_relay_e, iota)
+    if vlb:
+        elig = _apply_edges(own, dst, -(own_e - send_own_e), iota)
+        q = elig.sum(2)
+        r = room_e.sum(2)
+        t = jnp.minimum(q, r)
+        frac = jnp.where(q > 0, t / jnp.maximum(q, 1e-30), 0.0)[:, :, None]
+        take = elig * frac
+        share_e = room_e * jnp.where(
+            r > 0, 1.0 / jnp.maximum(r, 1e-30), 0.0)[:, :, None]
+        own = own - take
+        g_share = jnp.take_along_axis(share_e, idx, axis=1)
+        w = vf * g_share
+        add = jnp.zeros_like(relay)
+        for s in range(u):
+            add = add + w[:, :, s:s + 1] * jnp.take(take, dstc[:, s], axis=1)
+        relay = relay + add
+        moved = t.sum(1)
+    else:
+        moved = jnp.zeros_like(delivered)
+
+    own_o[...] = own
+    relay_o[...] = relay
+    deliv_o[...] = delivered[:, None]
+    moved_o[...] = moved[:, None]
+
+
+def rotor_slice_fwd(
+    own: jnp.ndarray,     # (B, N, N)
+    relay: jnp.ndarray,   # (B, N, N)
+    dst: jnp.ndarray,     # (N, u) int32
+    vlb: bool, block_b: int, interpret: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    bsz, n = own.shape[0], own.shape[1]
+    u = dst.shape[1]
+    grid = (bsz // block_b,)
+    state_spec = pl.BlockSpec((block_b, n, n), lambda b: (b, 0, 0))
+    scalar_spec = pl.BlockSpec((block_b, 1), lambda b: (b, 0))
+    own2, relay2, deliv, moved = pl.pallas_call(
+        functools.partial(_kernel, vlb=vlb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, u), lambda b: (0, 0)),
+            state_spec,
+            state_spec,
+        ],
+        out_specs=[state_spec, state_spec, scalar_spec, scalar_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n, n), own.dtype),
+            jax.ShapeDtypeStruct((bsz, n, n), own.dtype),
+            jax.ShapeDtypeStruct((bsz, 1), own.dtype),
+            jax.ShapeDtypeStruct((bsz, 1), own.dtype),
+        ],
+        interpret=interpret,
+    )(dst, own, relay)
+    return own2, relay2, deliv[:, 0], moved[:, 0]

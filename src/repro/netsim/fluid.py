@@ -12,7 +12,13 @@ the dense slice adjacency exported by `OperaTopology.matching_tensor`;
 the batched jnp engine in `netsim/fluid_jax.py` implements *identical*
 math (lockstep-tested by tests/test_netsim_jax.py; the SC-AST-LOCKSTEP
 staticcheck rule flags diffs touching one file without the other) and
-is the one the benchmark sweeps run on.  RotorLB's VLB spreading is modeled as a
+is the one the benchmark sweeps run on.  That engine now carries two
+interchangeable backends — the dense scan mirroring this oracle
+term-for-term, and a permutation-sparse gather/scatter form
+(`kernels/rotor_slice/`, fed by `OperaTopology.
+matching_index_tensor()`) that reaches the k >= 32 Appendix-B design
+points — but *this* dense numpy recurrence stays the single source of
+truth both parity-test against.  RotorLB's VLB spreading is modeled as a
 proportional fluid allocation: each rack offers its queued backlog to
 all live partners in proportion to their spare circuit room (rather
 than the earlier greedy top-4 heuristic), which is both closer to a

@@ -17,6 +17,26 @@ step.  The scan runs a fixed ``max_cycles`` budget (scenarios that
 finish early just stop moving bytes); completion times are recovered
 from the cumulative-delivery trajectory on the host afterwards, exactly
 as the oracle's early-exit loop records them.
+
+Two engines share the public API (`engine=` on
+`simulate_rotor_bulk_batch`):
+
+* **dense** — the original vmap(scan(scan)) over ``(S, N, N)`` masks.
+* **sparse** — gathers over the permutation-sparse
+  ``(S, N, u)`` index tensor (`OperaTopology.matching_index_tensor()`,
+  sentinel N = dark slot) via the `kernels/rotor_slice` Pallas op,
+  cutting the per-slice work from O(N²·u) (the VLB relay matmul) to
+  O(N·(N + u)) and the topology artifact from O(S·N²) to O(S·N·u) —
+  what makes the k >= 32 Appendix-B points fit on one host.  The
+  sparse engine is a *host-side* per-step driver: one jitted call per
+  slice, because XLA CPU executes a multi-step program (scan or
+  unrolled) several-fold slower per step than the identical step
+  compiled alone — measured on the benchmark backend, see
+  benchmarks/perf_track.py for the tracked numbers.  ``engine="auto"``
+  picks sparse at N >= `SPARSE_AUTO_RACKS`, dense below.  Both engines
+  agree with the oracle at f32 ulp tolerance (tests/test_rotor_slice.py
+  pins sparse-vs-dense on every default Appendix-B point, faulted and
+  unfaulted).
 """
 from __future__ import annotations
 
@@ -88,6 +108,130 @@ def _run_batch(adj, own0, vlb: bool, num_cycles: int):
         return done_t.reshape(-1), wire_t.reshape(-1), own.sum() + relay.sum()
 
     return jax.vmap(one_scenario)(own0)
+
+
+# --------------------------------------------------------------------------
+# Permutation-sparse engine (gather/scatter over matching_index_tensor)
+# --------------------------------------------------------------------------
+
+# engine="auto" switches to the sparse gather engine at this rack count:
+# the dense relay matmul's O(N^2 u) overtakes the sparse step's
+# O(N (N + u)) well below this on paper radixes, but per-step dispatch
+# overhead eats the win for small fabrics (benchmarks/perf_track.py
+# records the measured crossover PR-over-PR).
+SPARSE_AUTO_RACKS = 192
+
+
+@functools.partial(jax.jit, static_argnames=("vlb",))
+def _sparse_slice_step(own, relay, done, wire, dst, vlb: bool):
+    """One sparse slice step + trajectory accumulation — the per-step
+    device program of the sparse driver.  The slice math lives in
+    `kernels.rotor_slice` (Pallas; `ref.rotor_slice_ref` is its oracle
+    and mirrors `fluid.rotor_slice_step` / `_slice_step`; change them
+    together)."""
+    from repro.kernels.rotor_slice.ops import rotor_slice_step
+
+    own, relay, delivered, moved = rotor_slice_step(own, relay, dst, vlb=vlb)
+    done = done + delivered
+    wire = wire + delivered + moved
+    return own, relay, done, wire
+
+
+def _run_batch_sparse(dst, own0, vlb: bool, num_cycles: int):
+    """Sparse analogue of `_run_batch`: same (done_t, wire_t, residual)
+    contract, but driven slice-by-slice from the host — one jitted call
+    per step.  Deliberately NOT a `lax.scan`: XLA CPU runs the sparse
+    step 4-5x slower per step inside a multi-step program (scan or
+    unrolled chunks alike) than as a standalone program, while a
+    single-step jit call leaves the compare-select chains fused and
+    fast.  Per-step dispatch costs microseconds against a
+    millisecond-scale step at the rack counts that route here."""
+    bsz = own0.shape[0]
+    own = own0
+    relay = jnp.zeros_like(own0)
+    done = jnp.zeros((bsz,), own0.dtype)
+    wire = jnp.zeros((bsz,), own0.dtype)
+    dst_slices = [dst[t] for t in range(dst.shape[0])]
+    done_t, wire_t = [], []
+    for _ in range(num_cycles):
+        for d in dst_slices:
+            own, relay, done, wire = _sparse_slice_step(
+                own, relay, done, wire, d, vlb)
+            done_t.append(done)
+            wire_t.append(wire)
+    residual = own.sum((1, 2)) + relay.sum((1, 2))
+    return jnp.stack(done_t, 1), jnp.stack(wire_t, 1), residual
+
+
+@functools.partial(jax.jit, static_argnames=("vlb",))
+def _sparse_slice_step_faulted(
+    own, relay, done, wire, blk, g, dst, pair_sw,
+    up_onset, up_detect, up_recover, tor_onset, tor_detect, tor_recover,
+    vlb: bool,
+):
+    """Faulted sparse step: rebuild the per-step masks from the compiled
+    component timelines (same int32 comparisons as
+    `_slice_step_faulted`, so masks stay *data* and one lowering serves
+    every failure draw), then run the edge-layout faulted math.  Slot s
+    of ``dst`` is switch s, so the per-uplink timelines apply directly
+    by slot; only the pair-dead relay mask still needs the dense
+    ``pair_sw`` serving-switch gather."""
+    from repro.kernels.rotor_slice.ref import rotor_slice_faulted_ref
+
+    bsz, n = own.shape[0], own.shape[1]
+    u = dst.shape[1]
+    up_f = (g >= up_onset) & (g < up_recover)
+    up_k = (g >= up_detect) & (g < up_recover)
+    tor_fb = (g >= tor_onset) & (g < tor_recover)
+    tor_kb = (g >= tor_detect) & (g < tor_recover)
+    psw = jnp.broadcast_to(pair_sw[None], (bsz, n, n))
+    p_k = jnp.take_along_axis(up_k, psw, axis=2)
+    pair_dead = (
+        p_k | jnp.swapaxes(p_k, 1, 2)
+        | tor_kb[:, :, None] | tor_kb[:, None, :]
+    ).astype(own.dtype)
+    own, relay, delivered, moved, blackholed = rotor_slice_faulted_ref(
+        own, relay, dst, up_f[:, :, :u], up_k[:, :, :u],
+        tor_fb, tor_kb, pair_dead, vlb=vlb)
+    done = done + delivered
+    wire = wire + delivered + moved
+    blk = blk + blackholed
+    return own, relay, done, wire, blk, g + 1
+
+
+def _run_batch_sparse_faulted(
+    dst, pair_sw, own0,
+    up_onset, up_detect, up_recover, tor_onset, tor_detect, tor_recover,
+    vlb: bool, num_cycles: int, paced_cycles: int,
+):
+    """Sparse analogue of `_run_batch_faulted` (same host-side per-step
+    driving as `_run_batch_sparse`); returns (done_t, wire_t, residual,
+    blackholed)."""
+    bsz = own0.shape[0]
+    if paced_cycles:
+        inject = own0 * (1.0 / paced_cycles)
+        own = jnp.zeros_like(own0)
+    else:
+        own = own0
+    relay = jnp.zeros_like(own0)
+    done = jnp.zeros((bsz,), own0.dtype)
+    wire = jnp.zeros((bsz,), own0.dtype)
+    blk = jnp.zeros((bsz,), own0.dtype)
+    g = jnp.zeros((), jnp.int32)
+    dst_slices = [dst[t] for t in range(dst.shape[0])]
+    done_t, wire_t = [], []
+    for c in range(num_cycles):
+        if paced_cycles and c < paced_cycles:
+            own = own + inject
+        for d in dst_slices:
+            own, relay, done, wire, blk, g = _sparse_slice_step_faulted(
+                own, relay, done, wire, blk, g, d, pair_sw,
+                up_onset, up_detect, up_recover,
+                tor_onset, tor_detect, tor_recover, vlb)
+            done_t.append(done)
+            wire_t.append(wire)
+    residual = own.sum((1, 2)) + relay.sum((1, 2))
+    return jnp.stack(done_t, 1), jnp.stack(wire_t, 1), residual, blk
 
 
 def _slice_step_faulted(state, xs, ops, vlb: bool):
@@ -276,6 +420,15 @@ def _faults_all_empty(faults) -> bool:
     return False
 
 
+def resolve_engine(engine: str, num_racks: int) -> str:
+    """Map ``engine="auto"`` to "dense"/"sparse" by design-point size."""
+    if engine == "auto":
+        return "sparse" if num_racks >= SPARSE_AUTO_RACKS else "dense"
+    if engine not in ("dense", "sparse"):
+        raise ValueError(f"engine must be auto|dense|sparse, got {engine!r}")
+    return engine
+
+
 def simulate_rotor_bulk_batch(
     cfg: OperaNetConfig,
     demands: np.ndarray,           # (B, N, N) or (N, N) rack->rack bytes
@@ -286,6 +439,7 @@ def simulate_rotor_bulk_batch(
     dtype=jnp.float32,
     faults=None,               # FailureSchedule | Sequence[FailureSchedule]
     paced_cycles: int = 0,
+    engine: str = "auto",      # auto | dense | sparse
 ) -> RotorBatchResult:
     """Simulate a batch of bulk-demand scenarios in one vmapped call.
 
@@ -300,6 +454,12 @@ def simulate_rotor_bulk_batch(
     Fig. 11 throughput-retention columns measure.  Both route through
     one faulted lowering per design point; when neither is set the
     original failure-free program runs untouched.
+
+    `engine` selects the dense scan or the permutation-sparse gather
+    engine (see module docstring); "auto" picks by rack count.  Within
+    either engine an event-less `faults` with no pacing dispatches to
+    that engine's unfaulted program, so `FailureSchedule.empty()` stays
+    bit-identical to the failure-free run.
     """
     demands = np.asarray(demands, np.float64)  # staticcheck: ok SC-AST-F64 (host staging)
     if demands.ndim == 2:
@@ -310,13 +470,19 @@ def simulate_rotor_bulk_batch(
     topo = topo or build_opera_topology(n, cfg.u, seed=seed, groups=cfg.groups)
     t = cycle_timing(cfg)
     cap = slice_capacity_bytes(cfg, t)
+    engine = resolve_engine(engine, n)
 
-    adj = jnp.asarray(topo.matching_tensor(), dtype)
     own0 = jnp.asarray(demands / cap, dtype)
     blackholed = None
     if _faults_all_empty(faults) and not paced_cycles:
-        done_t, wire_t, residual = _run_batch(
-            adj, own0, bool(vlb), int(max_cycles))
+        if engine == "sparse":
+            dst = jnp.asarray(topo.matching_index_tensor())
+            done_t, wire_t, residual = _run_batch_sparse(
+                dst, own0, bool(vlb), int(max_cycles))
+        else:
+            adj = jnp.asarray(topo.matching_tensor(), dtype)
+            done_t, wire_t, residual = _run_batch(
+                adj, own0, bool(vlb), int(max_cycles))
     else:
         from repro.netsim.faults import (
             FailureSchedule,
@@ -329,15 +495,27 @@ def simulate_rotor_bulk_batch(
         masks = (faults if isinstance(faults, FaultMasks)
                  else compile_fault_masks(topo, faults))
         masks = masks.broadcast_to(demands.shape[0])
-        sw = jnp.asarray(masks.switch_id)
-        done_t, wire_t, residual, blackholed = _run_batch_faulted(
-            adj, sw, jnp.asarray(masks.pair_switch), own0,
-            jnp.asarray(masks.up_onset), jnp.asarray(masks.up_detect),
-            jnp.asarray(masks.up_recover),
-            jnp.asarray(masks.tor_onset), jnp.asarray(masks.tor_detect),
-            jnp.asarray(masks.tor_recover),
-            bool(vlb), int(max_cycles), int(paced_cycles),
-        )
+        if engine == "sparse":
+            dst = jnp.asarray(topo.matching_index_tensor())
+            done_t, wire_t, residual, blackholed = _run_batch_sparse_faulted(
+                dst, jnp.asarray(masks.pair_switch), own0,
+                jnp.asarray(masks.up_onset), jnp.asarray(masks.up_detect),
+                jnp.asarray(masks.up_recover),
+                jnp.asarray(masks.tor_onset), jnp.asarray(masks.tor_detect),
+                jnp.asarray(masks.tor_recover),
+                bool(vlb), int(max_cycles), int(paced_cycles),
+            )
+        else:
+            adj = jnp.asarray(topo.matching_tensor(), dtype)
+            sw = jnp.asarray(masks.switch_id)
+            done_t, wire_t, residual, blackholed = _run_batch_faulted(
+                adj, sw, jnp.asarray(masks.pair_switch), own0,
+                jnp.asarray(masks.up_onset), jnp.asarray(masks.up_detect),
+                jnp.asarray(masks.up_recover),
+                jnp.asarray(masks.tor_onset), jnp.asarray(masks.tor_detect),
+                jnp.asarray(masks.tor_recover),
+                bool(vlb), int(max_cycles), int(paced_cycles),
+            )
         blackholed = np.asarray(blackholed, np.float64) * cap  # staticcheck: ok SC-AST-F64 (host staging)
 
     # Device f32 trajectories are de-normalized on the host at float64
@@ -395,11 +573,12 @@ def simulate_rotor_bulk_jax(
     seed: int = 0,
     faults=None,
     paced_cycles: int = 0,
+    engine: str = "auto",
 ) -> RotorFluidResult:
     """Drop-in single-scenario API (batch of one) matching
     `fluid.simulate_rotor_bulk`'s signature and result type."""
     r = simulate_rotor_bulk_batch(
         cfg, demand, vlb=vlb, max_cycles=max_cycles, topo=topo, seed=seed,
-        faults=faults, paced_cycles=paced_cycles,
+        faults=faults, paced_cycles=paced_cycles, engine=engine,
     )
     return r.scenario(0)

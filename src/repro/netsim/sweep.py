@@ -23,8 +23,13 @@ import numpy as np
 
 from repro.configs.opera_paper import OperaNetConfig
 from repro.core.schedule import cycle_timing
-from repro.core.topology import build_opera_topology
+from repro.core.topology import build_lifted_opera_topology, build_opera_topology
 from repro.netsim.fluid_jax import RotorBatchResult, simulate_rotor_bulk_batch
+
+# Above this rack count `run_design` builds the topology as a lift of a
+# small base schedule (exact App-B structure, tractable construction)
+# instead of drawing N random perfect matchings directly.
+LIFTED_TOPO_RACKS = 128
 from repro.netsim.workloads import (
     demand_all_to_all,
     demand_hotrack,
@@ -71,10 +76,30 @@ class SweepSpec:
     skew_frac: float = 0.2          # active-rack fraction for `skew`
     vlb: bool = True
     max_cycles: int = 120
+    engine: str = "auto"            # fluid_jax engine: auto | dense | sparse
 
     @property
     def scenarios_per_design(self) -> int:
         return len(self.workloads) * len(self.loads) * len(self.seeds)
+
+
+def appendix_b_grid() -> Tuple[DesignPoint, ...]:
+    """The full Appendix-B expansion grid: every radix the paper tables
+    (k = 8 .. 64), small fabrics at both group counts, and the large
+    design points (k >= 32, including the 5184-host k=24-n432 scale
+    point's rack count at k=32) that only the sparse engine sweeps —
+    dense (S, N, N) matching tensors are hundreds of MB there."""
+    return (
+        DesignPoint(k=8, num_racks=16, groups=1),
+        DesignPoint(k=8, num_racks=16, groups=2),
+        DesignPoint(k=12, num_racks=108, groups=1),
+        DesignPoint(k=12, num_racks=108, groups=2),
+        DesignPoint(k=16, num_racks=128, groups=1),
+        DesignPoint(k=24, num_racks=240, groups=2),
+        DesignPoint(k=32, num_racks=432, groups=1),
+        DesignPoint(k=32, num_racks=512, groups=2),
+        DesignPoint(k=64, num_racks=1024, groups=4),
+    )
 
 
 def scenario_demand(
@@ -104,9 +129,14 @@ def run_design(
 ) -> Tuple[List[Dict], RotorBatchResult]:
     """All of one design point's scenarios in a single vmapped call."""
     cfg = dp.to_config()
-    topo = build_opera_topology(
-        cfg.num_racks, cfg.u, seed=dp.topo_seed, groups=cfg.groups
-    )
+    if cfg.num_racks > LIFTED_TOPO_RACKS:
+        topo = build_lifted_opera_topology(
+            cfg.num_racks, cfg.u, seed=dp.topo_seed, groups=cfg.groups
+        )
+    else:
+        topo = build_opera_topology(
+            cfg.num_racks, cfg.u, seed=dp.topo_seed, groups=cfg.groups
+        )
     grid = list(itertools.product(spec.workloads, spec.loads, spec.seeds))
     demands = np.stack(
         [
@@ -115,7 +145,8 @@ def run_design(
         ]
     )
     res = simulate_rotor_bulk_batch(
-        cfg, demands, vlb=spec.vlb, max_cycles=spec.max_cycles, topo=topo
+        cfg, demands, vlb=spec.vlb, max_cycles=spec.max_cycles, topo=topo,
+        engine=spec.engine,
     )
     t = cycle_timing(cfg)
     host_bw_gbps = cfg.num_hosts * cfg.link_rate_gbps

@@ -8,9 +8,9 @@ Stages (select with ``--layers``):
   switch-fault budget).
 * ``ast``        — walk every .py under src/tests/benchmarks/examples/
   scripts for the compat/lockstep/trio/f64 policies.
-* ``jaxpr``      — trace the eight engine entry points (two netsim
-  engines plus their faulted lowerings, four Pallas kernels) and run
-  the f64/callback/recompile rules.
+* ``jaxpr``      — trace the eleven engine entry points (dense + sparse
+  netsim engines plus their faulted lowerings, five Pallas kernels) and
+  run the f64/callback/recompile rules.
 
 Exit code 0 iff no ``error``-severity findings.  ``--json`` writes the
 machine-readable report (CI keeps ``results/staticcheck.json``).
@@ -103,6 +103,7 @@ def run_jaxpr(report: Report) -> None:
         check_callbacks,
         check_float64,
         count_fault_lowerings,
+        count_sparse_lowerings,
         count_sweep_lowerings,
         trace_entrypoints,
     )
@@ -115,6 +116,8 @@ def run_jaxpr(report: Report) -> None:
     report.extend(recompile, "jaxpr:recompile")
     _, fault_recompile = count_fault_lowerings()
     report.extend(fault_recompile, "jaxpr:fault-recompile")
+    _, sparse_recompile = count_sparse_lowerings()
+    report.extend(sparse_recompile, "jaxpr:sparse-recompile")
 
 
 def main(argv=None) -> int:

@@ -22,10 +22,15 @@ SC-JAX-RECOMPILE  the sweep grid compiles more than once per design
                   never trigger fresh lowerings.
 
 Traced entry points: ``fluid_jax._run_batch`` / ``_run_batch_faulted``
-(the device programs under ``simulate_rotor_bulk_batch``),
+(the dense device programs under ``simulate_rotor_bulk_batch``),
+``fluid_jax._sparse_slice_step`` / ``_sparse_slice_step_faulted`` (the
+sparse engine's per-step programs — ``count_sparse_lowerings`` holds
+them to one lowering per design point across slices and cycles),
 ``flows_jax._run_batch`` / ``_run_batch_faulted`` (under
-``simulate_grid`` / ``simulate_flows_batch``), and the four Pallas
-kernel ``ops`` wrappers.
+``simulate_grid`` / ``simulate_flows_batch``), and the five Pallas
+kernel ``ops`` wrappers (``rotor_slice_step`` traced with
+``force_pallas=True`` so the kernel body, not the CPU ref fast path,
+is what the rules walk).
 """
 from __future__ import annotations
 
@@ -78,12 +83,32 @@ def _entry_specs() -> List[Tuple[str, Callable, Callable]]:
     from repro.kernels.mamba_scan.ops import mamba_scan
     from repro.kernels.moe_gmm.ops import moe_gmm
     from repro.kernels.rglru_scan.ops import rglru_scan
+    from repro.kernels.rotor_slice.ops import rotor_slice_step
 
     return [
         (
             "netsim.fluid_jax._run_batch",
             lambda a, o: fluid_jax._run_batch(a, o, True, 3),
             lambda: (sd((6, 8, 8)), sd((2, 8, 8))),
+        ),
+        (
+            "netsim.fluid_jax._sparse_slice_step",
+            lambda *a: fluid_jax._sparse_slice_step(*a, True),
+            lambda: (sd((2, 8, 8)), sd((2, 8, 8)), sd((2,)), sd((2,)),
+                     sd((8, 2), jnp.int32)),
+        ),
+        (
+            "netsim.fluid_jax._sparse_slice_step_faulted",
+            lambda *a: fluid_jax._sparse_slice_step_faulted(*a, True),
+            lambda: (
+                sd((2, 8, 8)), sd((2, 8, 8)), sd((2,)), sd((2,)), sd((2,)),
+                sd((), jnp.int32), sd((8, 2), jnp.int32),
+                sd((8, 8), jnp.int32),
+                sd((2, 8, 3), jnp.int32), sd((2, 8, 3), jnp.int32),
+                sd((2, 8, 3), jnp.int32),
+                sd((2, 8), jnp.int32), sd((2, 8), jnp.int32),
+                sd((2, 8), jnp.int32),
+            ),
         ),
         (
             "netsim.fluid_jax._run_batch_faulted",
@@ -141,6 +166,12 @@ def _entry_specs() -> List[Tuple[str, Callable, Callable]]:
             "kernels.rglru_scan.ops.rglru_scan",
             lambda a, bx, h0: rglru_scan(a, bx, h0, interpret=True),
             lambda: (sd((1, 8, 16)), sd((1, 8, 16)), sd((1, 16))),
+        ),
+        (
+            "kernels.rotor_slice.ops.rotor_slice_step",
+            lambda o, r, d: rotor_slice_step(o, r, d, interpret=True,
+                                             force_pallas=True),
+            lambda: (sd((2, 8, 8)), sd((2, 8, 8)), sd((8, 2), jnp.int32)),
         ),
     ]
 
@@ -310,5 +341,47 @@ def count_fault_lowerings(
             f"{num_draws} failure draws through one design point compiled "
             f"{new} `_run_batch_faulted` lowerings — fault masks are data; "
             "the engine must lower once per design point, never per draw",
+            path=path, line=line))
+    return new, findings
+
+
+def count_sparse_lowerings(
+    num_cycles: int = 3, num_demands: int = 2,
+) -> Tuple[int, List[Finding]]:
+    """SC-JAX-RECOMPILE for the sparse engine: its host-side driver
+    re-invokes `fluid_jax._sparse_slice_step` once per slice per cycle,
+    so a whole run — and every run at the same design point, whatever
+    the demand draw — must reuse ONE lowering (slice index tensors are
+    same-shape data operands; the global step counter never becomes a
+    trace constant).
+
+    Returns (new_lowerings, findings)."""
+    import numpy as np
+
+    from repro.core.topology import build_opera_topology
+    from repro.netsim import fluid_jax
+    from repro.netsim.sweep import DesignPoint
+
+    topo = build_opera_topology(8, 2, seed=0)
+    cfg = DesignPoint(k=4, num_racks=8).to_config()
+    before = fluid_jax._sparse_slice_step._cache_size()
+    rng = np.random.default_rng(0)
+    for _ in range(num_demands):
+        demand = rng.uniform(0, 1e6, (8, 8))
+        np.fill_diagonal(demand, 0.0)
+        fluid_jax.simulate_rotor_bulk_batch(
+            cfg, demand[None], topo=topo, max_cycles=num_cycles,
+            engine="sparse")
+    new = fluid_jax._sparse_slice_step._cache_size() - before
+    path, line = _src_location(fluid_jax._sparse_slice_step)
+    findings: List[Finding] = []
+    if new > 1:
+        findings.append(Finding(
+            "SC-JAX-RECOMPILE",
+            f"{num_demands} sparse-engine runs x {num_cycles} cycles x "
+            f"{topo.num_slices} slices at one design point compiled {new} "
+            "`_sparse_slice_step` lowerings — slice index tensors are "
+            "data; the per-step program must lower once per design-point "
+            "shape, never per slice or per run",
             path=path, line=line))
     return new, findings

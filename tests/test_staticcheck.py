@@ -337,10 +337,13 @@ class TestJaxprRules:
 
     def test_all_entrypoints_trace(self, entries):
         names = {e.name for e in entries}
-        assert len(names) == 8
+        assert len(names) == 11
         assert any("fluid_jax" in n for n in names)
         assert "netsim.fluid_jax._run_batch_faulted" in names
         assert "netsim.flows_jax._run_batch_faulted" in names
+        assert "netsim.fluid_jax._sparse_slice_step" in names
+        assert "netsim.fluid_jax._sparse_slice_step_faulted" in names
+        assert "kernels.rotor_slice.ops.rotor_slice_step" in names
         assert any("flash_attention" in n for n in names)
 
     def test_engines_have_no_f64_or_callbacks(self, entries):
@@ -412,6 +415,19 @@ class TestRecompilePinning:
         assert findings == []
         assert new <= 1
         new2, findings2 = count_fault_lowerings(num_draws=2, max_cycles=5)
+        assert findings2 == []
+        assert new2 == 0
+
+    def test_sparse_demand_draws_share_one_lowering(self):
+        """Sparse engine: distinct demand draws through one design point
+        must add at most one `_sparse_slice_step` lowering (slice index
+        tensors are data, not static), and a re-run must add none."""
+        from repro.staticcheck.jaxpr_rules import count_sparse_lowerings
+
+        new, findings = count_sparse_lowerings(num_cycles=3, num_demands=2)
+        assert findings == []
+        assert new <= 1
+        new2, findings2 = count_sparse_lowerings(num_cycles=3, num_demands=2)
         assert findings2 == []
         assert new2 == 0
 
