@@ -1,26 +1,30 @@
 """Fig. 7: Datamining FCT vs load — Opera admits 40 %, statics ~25 %.
 
 The full (network x load x seed) grid runs through the batched JAX flow
-engine in ONE vmapped device call; the saturation knees come from the
-batched-bisection `flows.saturation_load` (two ladder calls per
-network).  Host count is scaled down 3x from the paper's 648 — the
-per-host capacity fractions that set the knees are size-invariant.
+engine as ONE device program (`sweep.run_flow_sweep`, auto/dense/tiled
+dispatch); the saturation knees come from the batched-bisection
+`flows.saturation_load` (two ladder calls per network).  Host count is
+scaled down 3x from the paper's 648 — the per-host capacity fractions
+that set the knees are size-invariant.
 """
 from __future__ import annotations
 
 from benchmarks.common import banner, check, save
 from repro.netsim.flows import saturation_load
-from repro.netsim.flows_jax import simulate_grid
-from repro.netsim.sweep import summarize
+from repro.netsim.sweep import FlowSweepSpec, run_flow_sweep, summarize
 from repro.netsim.workloads import byte_fraction_below
 
 NETS = ("opera", "expander", "clos", "rotornet")
 SIM_KW = dict(num_hosts=216, horizon_s=0.8, tail_s=0.4)
 
 
-def run(loads=(0.01, 0.10, 0.25, 0.40), seeds=(1, 2)) -> dict:
+def run(loads=(0.01, 0.10, 0.25, 0.40), seeds=(1, 2),
+        engine: str = "auto") -> dict:
     banner("Fig. 7 — Datamining workload, FCT vs load (batched JAX engine)")
-    rows = simulate_grid(NETS, ("datamining",), loads, seeds=seeds, **SIM_KW)
+    rows = run_flow_sweep(
+        FlowSweepSpec(networks=NETS, workloads=("datamining",),
+                      loads=tuple(loads), seeds=tuple(seeds), engine=engine),
+        **SIM_KW)
     mean = summarize(
         rows,
         by=("network", "load"),
@@ -39,7 +43,7 @@ def run(loads=(0.01, 0.10, 0.25, 0.40), seeds=(1, 2)) -> dict:
         net: saturation_load(
             net, "datamining",
             ceiling=0.55, coarse_points=7, refine_points=4, seeds=(1,),
-            num_hosts=162, horizon_s=0.8, tail_s=0.4,
+            engine=engine, num_hosts=162, horizon_s=0.8, tail_s=0.4,
         )
         for net in ("opera", "expander")
     }

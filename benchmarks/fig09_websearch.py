@@ -1,23 +1,26 @@
 """Fig. 9: Websearch (all-indirect worst case) — Opera admits ~10 %.
 
 The (network x load x seed) grid runs through the batched JAX flow
-engine in one vmapped device call; the capacity model supplies the
-analytic cross-check.
+engine as one device program (`sweep.run_flow_sweep`, auto/dense/tiled
+dispatch); the capacity model supplies the analytic cross-check.
 """
 from __future__ import annotations
 
 from benchmarks.common import banner, check, save
 from repro.netsim.capacity import summary_648
-from repro.netsim.flows_jax import simulate_grid
-from repro.netsim.sweep import summarize
+from repro.netsim.sweep import FlowSweepSpec, run_flow_sweep, summarize
 
 NETS = ("opera", "expander", "clos")
 SIM_KW = dict(num_hosts=216, horizon_s=0.6, tail_s=0.3)
 
 
-def run(loads=(0.01, 0.05, 0.10, 0.20, 0.25), seeds=(2, 3)) -> dict:
+def run(loads=(0.01, 0.05, 0.10, 0.20, 0.25), seeds=(2, 3),
+        engine: str = "auto") -> dict:
     banner("Fig. 9 — Websearch workload (Opera pays tax on everything)")
-    rows = simulate_grid(NETS, ("websearch",), loads, seeds=seeds, **SIM_KW)
+    rows = run_flow_sweep(
+        FlowSweepSpec(networks=NETS, workloads=("websearch",),
+                      loads=tuple(loads), seeds=tuple(seeds), engine=engine),
+        **SIM_KW)
     mean = summarize(
         rows,
         by=("network", "load"),

@@ -70,7 +70,8 @@ def _cycle_bytes_per_host() -> float:
     return OPERA_648.link_rate_gbps * 1e9 / 8 * t.cycle_ms * 1e-3
 
 
-def _flow_measured_total(x_adms, num_hosts=216, horizon_s=0.5, seed=5) -> list:
+def _flow_measured_total(x_adms, num_hosts=216, horizon_s=0.5, seed=5,
+                         engine: str = "auto") -> list:
     """Aggregate served throughput (fraction of host bw) from the flow
     engine: one vmapped call over every Websearch-load point, each a
     mixed scenario with the bulk class offered 1.3x the slot-derated
@@ -87,7 +88,7 @@ def _flow_measured_total(x_adms, num_hosts=216, horizon_s=0.5, seed=5) -> list:
         )
         for x in x_adms
     ]
-    batch = simulate_flows_batch(scns)
+    batch = simulate_flows_batch(scns, engine=engine)
     agg_Bps = num_hosts * scns[0].nic_Bps
     return [
         float((s.sizes.sum() - rem.sum()) / horizon_s / agg_Bps)
@@ -95,14 +96,14 @@ def _flow_measured_total(x_adms, num_hosts=216, horizon_s=0.5, seed=5) -> list:
     ]
 
 
-def run(ws_loads=(0.0, 0.02, 0.05, 0.08, 0.10)) -> dict:
+def run(ws_loads=(0.0, 0.02, 0.05, 0.08, 0.10), engine: str = "auto") -> dict:
     banner("Fig. 10 — aggregate throughput vs Websearch (latency) load")
     rows = []
     op, ex = OPERA_648_PT, EXPANDER_650_PT
     lat_cap = latency_capacity(op)
     x_adms = [min(x, lat_cap) for x in ws_loads]
     measured = _measured_bulk_frac(x_adms)
-    flow_total = _flow_measured_total(x_adms)
+    flow_total = _flow_measured_total(x_adms, engine=engine)
     for x, x_adm, meas, ftot in zip(ws_loads, x_adms, measured, flow_total):
         # Opera: latency traffic at per-host load x occupies x*avg_hops
         # link-slots (the wire-byte tax); the remaining fabric slots carry

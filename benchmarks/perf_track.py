@@ -1,23 +1,34 @@
-"""PR-over-PR step-time tracking: dense vs permutation-sparse engine.
+"""PR-over-PR step-time tracking for both perf-tracked hot paths:
+the rotor engines (dense vs permutation-sparse) and the flow engines
+(dense vs tiled-streaming).
 
-Measures the median per-step, per-scenario wall time of both fluid
-engines at representative Appendix-B design points — the two paper-table
-fabrics (k8-n16, k12-n108 at both group counts) and one k >= 32 point
-the dense path never covered — and records them into the root-level
-``BENCH_netsim.json`` with an append-only history keyed by commit, so
-regressions in either engine show up as a diff in review.
+Rotor section: measures the median per-step, per-scenario wall time of
+both fluid engines at representative Appendix-B design points — the two
+paper-table fabrics (k8-n16, k12-n108 at both group counts) and one
+k >= 32 point the dense path never covered — and records them into the
+root-level ``BENCH_netsim.json`` with an append-only history keyed by
+commit, so regressions in either engine show up as a diff in review.
 
-Both engines run *truncated* slice sets (``SLICES_MEASURED`` steps) on
-identical demand batches: step time is shape-stationary across a run, so
-a short prefix measures the same thing as a full sweep while keeping the
-dense (S, N, N) adjacency tractable at N = 432 (the full 432-slice
-tensor is ~320 MB; 16 slices are ~12).  The truncated dense adjacency is
-rebuilt from the index tensor rather than `matching_tensor()` for the
-same reason.
+Both rotor engines run *truncated* slice sets (``SLICES_MEASURED``
+steps) on identical demand batches: step time is shape-stationary
+across a run, so a short prefix measures the same thing as a full sweep
+while keeping the dense (S, N, N) adjacency tractable at N = 432 (the
+full 432-slice tensor is ~320 MB; 16 slices are ~12).  The truncated
+dense adjacency is rebuilt from the index tensor rather than
+`matching_tensor()` for the same reason.
 
-``--fast`` skips timing entirely and runs the sparse-vs-dense parity
-gate (full engine runs at the two small points, faulted and unfaulted)
-— the mode `scripts/ci_tier1.sh` wires in; exits nonzero on drift.
+Flow section: measures dense-vs-tiled per-step wall time and peak
+device flow state on synthetic short-flow streams (``FLOW_SIZES``
+flows over ``FLOW_STEPS`` fixed-dt steps) and records them into
+``BENCH_flows.json`` with the same commit-keyed history.  Dense
+per-step time comes from differencing two truncated-horizon runs (the
+same shape-stationarity argument; differencing cancels host staging),
+tiled from a full end-to-end run including its host chunk loop.
+
+``--fast`` skips timing entirely and runs both parity gates — the
+sparse-vs-dense rotor gate and the tiled-vs-dense flow gate (full
+engine runs at small points, faulted and unfaulted) — the mode
+`scripts/ci_tier1.sh` wires in; exits nonzero on drift.
 """
 from __future__ import annotations
 
@@ -35,6 +46,7 @@ from repro.netsim.sweep import DesignPoint
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 BENCH_PATH = REPO_ROOT / "BENCH_netsim.json"
+BENCH_FLOWS_PATH = REPO_ROOT / "BENCH_flows.json"
 
 POINTS = (
     DesignPoint(k=8, num_racks=16, groups=1),
@@ -49,6 +61,17 @@ REPEATS = 7
 # acceptance bar: at N >= this, sparse must beat dense by SPEEDUP_MIN
 SPEEDUP_AT_RACKS = 432
 SPEEDUP_MIN = 2.0
+
+# flow-engine section: synthetic short-flow streams of this many flows
+# over FLOW_STEPS steps; dense per-step time is differenced between
+# runs truncated to FLOW_DENSE_STEPS
+FLOW_SIZES = (32768, 131072, 393216)
+FLOW_STEPS = 1500
+FLOW_DENSE_STEPS = (150, 450)
+FLOW_REPEATS = 5
+# acceptance bar: at the largest size, tiled must beat dense 2x in
+# step time OR peak device flow state
+FLOW_WIN_MIN = 2.0
 
 
 def _build_point(dp: DesignPoint):
@@ -130,11 +153,11 @@ def _git_head() -> str:
         return "unknown"
 
 
-def _record(points: dict) -> dict:
+def _record(points: dict, path: Path = BENCH_PATH) -> dict:
     doc = dict(updated="", points={}, history=[])
-    if BENCH_PATH.exists():
+    if path.exists():
         try:
-            doc = json.loads(BENCH_PATH.read_text())
+            doc = json.loads(path.read_text())
         except json.JSONDecodeError:
             pass
     stamp = time.strftime("%Y-%m-%d")
@@ -142,7 +165,7 @@ def _record(points: dict) -> dict:
     doc["points"] = points
     doc.setdefault("history", []).append(
         dict(commit=_git_head(), date=stamp, points=points))
-    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    path.write_text(json.dumps(doc, indent=1) + "\n")
     return doc
 
 
@@ -187,11 +210,167 @@ def parity_gate(tol: float = 1e-5) -> bool:
     return ok
 
 
+def _stream_scenario(num_flows: int, num_steps: int = FLOW_STEPS,
+                     seed: int = 0):
+    """Synthetic mostly-short-flow stream: `num_flows` Poisson-ish
+    arrivals over 80% of the horizon, lognormal sizes with a clipped
+    heavy tail (all three FCT classes populated), single latency pool
+    provisioned at 1.5x the offered rate — the admitted regime the
+    tiled engine targets, where the concurrently-active population is a
+    sliver of the lifetime flow count."""
+    from repro.netsim.flows import FlowScenario
+
+    dt_s = 1e-3
+    horizon_s = 0.8 * num_steps * dt_s
+    tail_s = 0.2 * num_steps * dt_s
+    link_gbps = 10.0
+    unit = link_gbps * 1e9 / 8.0 * dt_s          # bytes per NIC-step
+    rng = np.random.default_rng(seed)
+    arr = np.sort(rng.uniform(0.0, horizon_s, num_flows))
+    sizes = np.clip(
+        rng.lognormal(mean=np.log(0.3 * unit), sigma=1.5, size=num_flows),
+        1e3, 30.0 * unit)
+    offered_Bps = sizes.sum() / horizon_s
+    return FlowScenario(
+        network="synthetic", workload="stream", load=0.0, seed=seed,
+        horizon_s=horizon_s, dt_s=dt_s, tail_s=tail_s,
+        num_hosts=1, link_gbps=link_gbps,
+        arr=arr, sizes=sizes,
+        start_step=np.ceil(arr / dt_s).astype(np.int32),
+        is_bulk=np.zeros(num_flows, bool),
+        lat_pool_Bps=float(1.5 * offered_Bps), bulk_pool_Bps=0.0,
+    )
+
+
+def measure_flow_point(num_flows: int) -> dict:
+    import dataclasses
+
+    from repro.netsim.flows_jax import (
+        DEFAULT_TILE,
+        dense_state_bytes,
+        simulate_flows_batch,
+        tiled_state_bytes,
+    )
+
+    scn = _stream_scenario(num_flows)
+
+    # dense per-step time by differencing two truncated horizons: the
+    # per-step cost is shape-stationary, and the difference cancels the
+    # O(n) host staging both runs pay.
+    def dense_run(steps):
+        trunc = dataclasses.replace(
+            scn, horizon_s=steps * scn.dt_s, tail_s=0.0)
+        simulate_flows_batch([trunc], engine="dense")
+
+    s_lo, s_hi = FLOW_DENSE_STEPS
+    dense_run(s_lo), dense_run(s_hi)           # warmup / compile
+    dense_t = []
+    for _ in range(FLOW_REPEATS):
+        t0 = time.perf_counter()
+        dense_run(s_lo)
+        t_lo = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        dense_run(s_hi)
+        t_hi = time.perf_counter() - t0
+        dense_t.append((t_hi - t_lo) / (s_hi - s_lo))
+
+    # tiled end-to-end over the full horizon, host chunk loop included
+    def tiled_run():
+        return simulate_flows_batch([scn], engine="tiled")
+
+    res = tiled_run()                          # warmup / compile
+    tiled_t = []
+    for _ in range(FLOW_REPEATS):
+        t0 = time.perf_counter()
+        tiled_run()
+        tiled_t.append((time.perf_counter() - t0) / scn.steps)
+
+    dense_us = float(np.median(dense_t)) * 1e6
+    tiled_us = float(np.median(tiled_t)) * 1e6
+    dense_b = dense_state_bytes(num_flows)
+    tiled_b = tiled_state_bytes(res.peak_window_tiles, DEFAULT_TILE)
+    return dict(
+        num_flows=num_flows, steps=scn.steps,
+        tile=DEFAULT_TILE, peak_window_tiles=res.peak_window_tiles,
+        dense_us_step=round(dense_us, 1),
+        tiled_us_step=round(tiled_us, 1),
+        speedup=round(dense_us / tiled_us, 2),
+        dense_state_mb=round(dense_b / 1e6, 2),
+        tiled_state_mb=round(tiled_b / 1e6, 2),
+        state_ratio=round(dense_b / tiled_b, 2),
+    )
+
+
+def flow_parity_gate() -> bool:
+    """Tiled-vs-dense flow-engine agreement — full runs on small grids,
+    clean and faulted, with deliberately tiny tiles so the windowing
+    and capacity-growth machinery is exercised.  Histograms must match
+    bitwise (the engines share the binning math); deficit snapshots to
+    f32 reduction-order tolerance; streamed percentiles within one
+    histogram bin of the dense engine's exact ones."""
+    from repro.netsim.faults import FailureEvent, FailureSchedule, apply_flow_faults
+    from repro.netsim.flows import FCT_BIN_LOG2_WIDTH, build_scenario
+    from repro.netsim.flows_jax import simulate_flows_batch
+
+    kw = dict(num_hosts=16, horizon_s=0.12, dt_s=5e-4, tail_s=0.1)
+    scns = [
+        build_scenario("opera", "websearch", 0.1, seed=0, **kw),
+        build_scenario("opera", "datamining", 0.35, seed=1, **kw),
+        build_scenario("expander", "websearch", 0.2, seed=2, **kw),
+        build_scenario("rotornet", "websearch", 0.15, seed=3, **kw),
+    ]
+    sched = FailureSchedule(
+        num_racks=8, num_switches=2, seed=5,
+        events=(FailureEvent("tor", (1,), onset_step=20, detect_lag=10,
+                             recover_step=120),
+                FailureEvent("switch", (0,), onset_step=40, detect_lag=8,
+                             recover_step=200)))
+    ok = True
+    for label, batch in (
+        ("clean", scns),
+        ("faulted", [apply_flow_faults(s, sched) for s in scns[:2]] + scns[2:]),
+    ):
+        dense = simulate_flows_batch(batch, engine="dense")
+        tiled = simulate_flows_batch(batch, engine="tiled", tile_size=64,
+                                     window_tiles=2, chunk_steps=48)
+        hist_ok = all(np.array_equal(d, t)
+                      for d, t in zip(dense.hists, tiled.hists))
+        ok &= check(f"flow {label}: histograms bitwise equal", hist_ok)
+        drift = max(
+            abs(d.backlog_frac - t.backlog_frac)
+            for d, t in zip(dense.results, tiled.results))
+        ok &= check(f"flow {label}: deficit drift < 1e-5", drift < 1e-5,
+                    f"{drift:.2e}")
+        fin_ok = all(d.finished_frac == t.finished_frac
+                     for d, t in zip(dense.results, tiled.results))
+        ok &= check(f"flow {label}: finished_frac exact", fin_ok)
+        bins_off = 0.0
+        for d, t in zip(dense.results, tiled.results):
+            for f in ("fct_p99_ms_small", "fct_p99_ms_mid",
+                      "fct_p99_ms_large"):
+                dv, tv = getattr(d, f), getattr(t, f)
+                if dv > 0 and np.isfinite(dv):
+                    bins_off = max(
+                        bins_off,
+                        abs(np.log2(tv / dv)) / FCT_BIN_LOG2_WIDTH)
+                else:
+                    ok &= check(f"flow {label}: {f} sentinel match",
+                                dv == tv, f"{dv} vs {tv}")
+        ok &= check(f"flow {label}: p99s within one histogram bin",
+                    bins_off <= 1.0, f"{bins_off:.2f} bins")
+        rem_ok = all(
+            np.allclose(d, t, rtol=1e-5, atol=1.0)
+            for d, t in zip(dense.remaining_bytes, tiled.remaining_bytes))
+        ok &= check(f"flow {label}: remaining bytes close", rem_ok)
+    return ok
+
+
 def run(fast: bool = False) -> dict:
     banner("Engine perf tracking — dense vs permutation-sparse step time")
     if fast:
         ok = parity_gate()
-        return dict(mode="fast", checks=dict(parity=ok))
+        ok_flow = flow_parity_gate()
+        return dict(mode="fast", checks=dict(parity=ok, flow_parity=ok_flow))
 
     points = {}
     for dp in POINTS:
@@ -209,8 +388,34 @@ def run(fast: bool = False) -> dict:
         bool(big) and all(r["speedup"] >= SPEEDUP_MIN for r in big),
         ", ".join(f"N={r['num_racks']}: {r['speedup']:.2f}x" for r in big))
     ok_parity = parity_gate()
-    return dict(points=points, checks=dict(speedup=ok_speed,
-                                           parity=ok_parity))
+
+    banner("Flow engine perf tracking — dense vs tiled streaming")
+    fpoints = {}
+    for n in FLOW_SIZES:
+        r = measure_flow_point(n)
+        fpoints[f"n{n}"] = r
+        print(f"  n={n:<8d} dense={r['dense_us_step']:8.1f} us/step  "
+              f"tiled={r['tiled_us_step']:8.1f}  "
+              f"speedup={r['speedup']:.2f}x  "
+              f"state {r['dense_state_mb']:.1f} -> {r['tiled_state_mb']:.1f} "
+              f"MB ({r['state_ratio']:.1f}x)")
+    fdoc = _record(fpoints, BENCH_FLOWS_PATH)
+    print(f"  recorded -> {BENCH_FLOWS_PATH.relative_to(REPO_ROOT)} "
+          f"(history: {len(fdoc['history'])} entries)")
+
+    largest = fpoints[f"n{max(FLOW_SIZES)}"]
+    ok_flow_win = check(
+        f"tiled >= {FLOW_WIN_MIN}x dense (step time or state) at "
+        f"n={max(FLOW_SIZES)}",
+        largest["speedup"] >= FLOW_WIN_MIN
+        or largest["state_ratio"] >= FLOW_WIN_MIN,
+        f"speedup={largest['speedup']:.2f}x, "
+        f"state={largest['state_ratio']:.2f}x")
+    ok_flow_parity = flow_parity_gate()
+    return dict(points=points, flow_points=fpoints,
+                checks=dict(speedup=ok_speed, parity=ok_parity,
+                            flow_win=ok_flow_win,
+                            flow_parity=ok_flow_parity))
 
 
 def main(argv=None):

@@ -13,7 +13,8 @@ python -m repro.staticcheck --json results/staticcheck.json
 # dynamic Fig. 11 fault sweep on the paper design point (--fast mode);
 # benchmarks/ is a repo-root package, so the root joins PYTHONPATH here.
 PYTHONPATH=src:. python benchmarks/fig11_faults.py --fast
-# sparse-vs-dense engine parity gate (no timing): full faulted/unfaulted
-# runs at the small Appendix-B points; fails on any trajectory drift.
+# engine parity gates (no timing): sparse-vs-dense rotor runs at the
+# small Appendix-B points, and tiled-vs-dense flow runs (bitwise FCT
+# histograms, streamed percentiles within one bin); fails on any drift.
 PYTHONPATH=src:. python -m benchmarks.perf_track --fast
 echo "CI TIER-1 GREEN"

@@ -106,6 +106,32 @@ print(f"ok flow engine: {len(frows)} scenarios, "
       f"finished={frows[0]['finished_frac']:.3f}")
 print("FLOW SMOKE PASSED")
 
+# tiled streaming flow engine: the same grid through the chunked
+# windowed path (deliberately tiny tiles so retirement + growth run)
+# must agree with the dense rows it just produced
+trows = simulate_grid(
+    ("opera", "expander"),
+    ("websearch",),
+    (0.05,),
+    seeds=(0,),
+    num_hosts=16,
+    horizon_s=0.1,
+    dt_s=5e-4,
+    tail_s=0.05,
+    engine="tiled",
+    tile_size=32,
+    window_tiles=1,
+    chunk_steps=16,
+)
+assert len(trows) == len(frows), trows
+for d, t in zip(frows, trows):
+    assert d["network"] == t["network"]
+    assert d["finished_frac"] == t["finished_frac"], (d, t)
+    assert d["admitted"] == t["admitted"], (d, t)
+    assert abs(d["backlog_frac"] - t["backlog_frac"]) < 1e-5, (d, t)
+print(f"ok tiled flow engine: {len(trows)} scenarios match dense")
+print("TILED FLOW SMOKE PASSED")
+
 # fault injection: the empty schedule must dispatch to the failure-free
 # program bit-for-bit, and a seeded mixed draw (links + one switch, with
 # a detection lag and mid-run recovery) must blackhole in-flight bytes

@@ -439,3 +439,29 @@ def apply_flow_faults(scn, schedule: FailureSchedule,
         frz_start=frz_start, frz_end=frz_end,
         lat_scale=lat_scale, bulk_scale=bulk_scale,
     )
+
+
+def flow_fault_arrays(scn, num_steps: int, order=None, pad_to: int = 0):
+    """Staged fault operands for one `FlowScenario`, shared by the
+    dense and tiled flow engines: four (n,) int32 per-flow windows and
+    two (num_steps,) float32 pool scales.  Fault-free scenarios get
+    NEVER-filled windows and unit scales — under the faulted lowering
+    those reduce to the plain recurrence.  `order` reindexes the
+    windows for the tiled engine's sorted layout; `pad_to` right-pads
+    the windows with NEVER for tile alignment."""
+    n = scn.num_flows
+    P = max(int(pad_to), n)
+
+    def win(w):
+        out = np.full(P, NEVER, np.int32)
+        if w is not None:
+            out[:n] = w if order is None else w[order]
+        return out
+
+    lat_scale = np.ones(num_steps, np.float32)
+    bulk_scale = np.ones(num_steps, np.float32)
+    if scn.has_faults:
+        lat_scale[:] = scn.lat_scale[:num_steps]
+        bulk_scale[:] = scn.bulk_scale[:num_steps]
+    return (win(scn.blk_start), win(scn.blk_end),
+            win(scn.frz_start), win(scn.frz_end), lat_scale, bulk_scale)

@@ -18,7 +18,9 @@ is folded into the calibrated pool capacities (netsim/capacity.py).
 This module is the *numpy oracle*: `build_scenario` freezes a scenario's
 arrivals/sizes/pools into a `FlowScenario`, `_oracle_steps` runs the
 fixed-dt processor-sharing recurrence on it, and `finalize` turns raw
-completion steps into a `FlowSimResult`.  The batched JAX engine
+completion steps into a `FlowSimResult` (`finalize_streamed` does the
+same from log-binned completion histograms — the form the tiled
+streaming engine accumulates on device).  The batched JAX engine
 (`netsim/flows_jax.py`) consumes the *same* `FlowScenario` and
 `finalize`, and its `_flow_step` mirrors `_oracle_steps`'s per-step math
 exactly — change the two together (lockstep-tested by
@@ -37,6 +39,48 @@ from repro.netsim.workloads import mean_flow_size, sample_flow_sizes
 
 BULK_CUTOFF = 15e6
 NETWORKS = ("opera", "expander", "clos", "rotornet")
+
+# ---------------- streamed FCT histograms ------------------------------
+# Log-spaced completion-time bins shared by the JAX engines' on-device
+# accumulators and the host-side quantile reconstruction.  96 bins over
+# [0.01 ms, 100 s] is ~1.19x per bin, so a histogram-derived percentile
+# is within one bin (< 19% relative) of the exact order statistic —
+# the resolution the paper's log-scale FCT figures plot at.  Flows
+# outside the range land in the edge bins (clipped, never dropped), so
+# per-class counts stay exact.
+FCT_HIST_LO_MS = 1e-2
+FCT_HIST_HI_MS = 1e5
+FCT_HIST_BINS = 96
+NUM_FCT_CLASSES = 3            # small (<100 KB) / mid / large (>= cutoff)
+FCT_HIST_LO_LOG2 = float(np.log2(FCT_HIST_LO_MS))
+FCT_BIN_LOG2_WIDTH = float(
+    (np.log2(FCT_HIST_HI_MS) - np.log2(FCT_HIST_LO_MS)) / FCT_HIST_BINS
+)
+
+
+def fct_hist_edges() -> np.ndarray:
+    """(FCT_HIST_BINS + 1,) bin edges in ms."""
+    return 2.0 ** (
+        FCT_HIST_LO_LOG2 + np.arange(FCT_HIST_BINS + 1) * FCT_BIN_LOG2_WIDTH
+    )
+
+
+def fct_class_id(sizes: np.ndarray) -> np.ndarray:
+    """(n,) int32 size-class index: 0 small, 1 mid, 2 large."""
+    return np.where(
+        sizes >= BULK_CUTOFF, 2, np.where(sizes >= 100e3, 1, 0)
+    ).astype(np.int32)
+
+
+def fct_bin(fct_ms: np.ndarray) -> np.ndarray:
+    """(n,) histogram bin index per completion time — the host reference
+    for the device-side binning in `flows_jax._hist_accumulate`."""
+    with np.errstate(divide="ignore"):
+        b = np.floor(
+            (np.log2(np.asarray(fct_ms, np.float64)) - FCT_HIST_LO_LOG2)
+            / FCT_BIN_LOG2_WIDTH
+        )
+    return np.clip(b, 0, FCT_HIST_BINS - 1).astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -342,6 +386,62 @@ def percentile_fct(fct_ms: np.ndarray, sel: np.ndarray, ok: np.ndarray) -> float
     return float(np.percentile(fct_ms[done], 99))
 
 
+def hist_percentile(hist: np.ndarray, q: float) -> float:
+    """Quantile of a log-binned FCT histogram, numpy.percentile-
+    compatible: the rank is interpolated between the two bracketing
+    order statistics exactly as np.percentile's linear rule, but each
+    order statistic is represented by its bin's geometric center — so
+    the result is within one bin of the exact empirical percentile."""
+    hist = np.asarray(hist, np.int64)
+    k = int(hist.sum())
+    if k == 0:
+        return float("nan")
+    edges = fct_hist_edges()
+    centers = np.sqrt(edges[:-1] * edges[1:])
+    cum = np.cumsum(hist)
+    p = (k - 1) * (q / 100.0)
+    lo_rank = int(np.floor(p)) + 1            # 1-indexed order statistic
+    frac = p - np.floor(p)
+    v_lo = centers[np.searchsorted(cum, lo_rank)]
+    v_hi = centers[np.searchsorted(cum, min(lo_rank + 1, k))]
+    return float(v_lo * (v_hi / v_lo) ** frac)
+
+
+def percentile_fct_streamed(
+    hist_class: np.ndarray, n_class: int, done_class: int
+) -> float:
+    """`percentile_fct`'s sentinel semantics on a streamed histogram:
+    0.0 for an empty class, +inf for the overload signals, else the
+    histogram-quantile 99th percentile."""
+    if n_class == 0:
+        return 0.0
+    if done_class == 0:
+        return float("inf")
+    if n_class > done_class and done_class < 5:
+        return float("inf")
+    return hist_percentile(hist_class, 99.0)
+
+
+def _stability(scn: FlowScenario, rem_mid: float, rem_end: float) -> float:
+    """Deficit-growth fraction over the second half of the arrival
+    window.  Stable systems hold the NIC-bound service deficit
+    ~stationary; overloaded ones grow it by (1 - capacity/load) of the
+    newly offered work.  (Raw backlog would flag heavy-tailed low
+    loads: one 1 GB flow arriving just before the snapshot IS backlog,
+    but no network could have served it yet.)
+
+    Zero-size pad flows are masked out *before* the sums (not just as
+    zero addends): numpy's pairwise summation regroups with array
+    length, so padded and unpadded scenarios would otherwise differ in
+    the last ulp."""
+    sizes = scn.sizes
+    real = sizes > 0
+    arrived_mid = float(sizes[real & scn.arrived_mask(scn.mid_step)].sum())
+    arrived_end = float(sizes[real & scn.arrived_mask(scn.end_step)].sum())
+    newly_offered = max(arrived_end - arrived_mid, 1.0)
+    return max(rem_end - rem_mid, 0.0) / newly_offered
+
+
 def finalize(
     scn: FlowScenario,
     done_step: np.ndarray,
@@ -349,23 +449,18 @@ def finalize(
     rem_end: float,
 ) -> FlowSimResult:
     """Raw completion steps -> FlowSimResult.  Shared verbatim by the
-    numpy oracle and the batched JAX engine."""
+    numpy oracle and the batched JAX engine.  Zero-size flows are
+    padding (never servable, never finished) and are excluded from
+    every class mask and fraction, so padded and unpadded scenarios
+    finalize identically."""
     ok = done_step >= 0
     fct_ms = np.where(ok, done_step * scn.dt_s - scn.arr, np.inf) * 1e3
     sizes = scn.sizes
-    small = sizes < 100e3
-    mid = (sizes >= 100e3) & (sizes < BULK_CUTOFF)
+    real = sizes > 0
+    small = real & (sizes < 100e3)
+    mid = real & (sizes >= 100e3) & (sizes < BULK_CUTOFF)
     large = sizes >= BULK_CUTOFF
-    # stability: did the NIC-bound service deficit grow over the second
-    # half of the arrival window?  stable systems hold it ~stationary;
-    # overloaded ones grow it by (1 - capacity/load) of the newly offered
-    # work.  (Raw backlog would flag heavy-tailed low loads: one 1 GB
-    # flow arriving just before the snapshot IS backlog, but no network
-    # could have served it yet.)
-    arrived_mid = float(sizes[scn.arrived_mask(scn.mid_step)].sum())
-    arrived_end = float(sizes[scn.arrived_mask(scn.end_step)].sum())
-    newly_offered = max(arrived_end - arrived_mid, 1.0)
-    growth = max(rem_end - rem_mid, 0.0) / newly_offered
+    growth = _stability(scn, rem_mid, rem_end)
     return FlowSimResult(
         load=scn.load,
         fct_p99_ms_small=percentile_fct(fct_ms, small, ok),
@@ -373,7 +468,43 @@ def finalize(
         fct_p99_ms_large=percentile_fct(fct_ms, large, ok),
         fct_mean_ms=float(np.mean(fct_ms[ok])) if ok.any() else float("inf"),
         admitted=growth < 0.08,
-        finished_frac=float(ok.mean()),
+        finished_frac=float(ok[real].mean()) if real.any() else 1.0,
+        backlog_frac=growth,
+    )
+
+
+def finalize_streamed(
+    scn: FlowScenario,
+    hist: np.ndarray,
+    fct_sum_ms: float,
+    rem_mid: float,
+    rem_end: float,
+) -> FlowSimResult:
+    """`finalize` from streamed accumulators instead of per-flow
+    completion steps: a (NUM_FCT_CLASSES, FCT_HIST_BINS) completion
+    histogram and the summed completion time.  Every finished flow
+    lands in exactly one (clipped) bin, so per-class finished counts
+    are the exact histogram row sums; percentiles are histogram
+    quantiles (within one bin of the exact statistic)."""
+    hist = np.asarray(hist, np.int64).reshape(NUM_FCT_CLASSES, FCT_HIST_BINS)
+    sizes = scn.sizes
+    real = sizes > 0
+    cls = fct_class_id(sizes)
+    n_cls = [int((real & (cls == c)).sum()) for c in range(NUM_FCT_CLASSES)]
+    done_cls = hist.sum(axis=1)
+    done_total = int(done_cls.sum())
+    n_real = int(real.sum())
+    growth = _stability(scn, rem_mid, rem_end)
+    return FlowSimResult(
+        load=scn.load,
+        fct_p99_ms_small=percentile_fct_streamed(hist[0], n_cls[0], int(done_cls[0])),
+        fct_p99_ms_mid=percentile_fct_streamed(hist[1], n_cls[1], int(done_cls[1])),
+        fct_p99_ms_large=percentile_fct_streamed(hist[2], n_cls[2], int(done_cls[2])),
+        fct_mean_ms=(
+            float(fct_sum_ms) / done_total if done_total else float("inf")
+        ),
+        admitted=growth < 0.08,
+        finished_frac=done_total / n_real if n_real else 1.0,
         backlog_frac=growth,
     )
 
@@ -428,19 +559,26 @@ def saturation_load(
     refine_points: int = 5,
     seeds: Sequence[int] = (0,),
     use_jax: bool = True,
+    engine: str = "auto",
     **kw,
 ) -> SaturationResult:
     """Admission knee by batched bisection up to a configurable ceiling.
 
     Two rounds of load ladders (each a single vmapped device call when
-    `use_jax`): a coarse grid on [floor, ceiling], then a fine grid
-    inside the bracket where admission flips.  A load is admitted when
-    the majority of seeds admit it.
+    `use_jax` — the whole coarse or fine ladder rides the batch axis,
+    through the dense or tiled engine per `engine`): a coarse grid on
+    [floor, ceiling], then a fine grid inside the bracket where
+    admission flips.  A load is admitted when the majority of seeds
+    admit it.
     """
     kw.setdefault("horizon_s", 1.0)
 
     if use_jax:
-        from repro.netsim.flows_jax import saturation_ladder
+        from repro.netsim.flows_jax import saturation_ladder as _jax_ladder
+
+        def saturation_ladder(network, workload, loads, seeds=(0,), **kw2):
+            return _jax_ladder(network, workload, loads, seeds=seeds,
+                               engine=engine, **kw2)
     else:
         def saturation_ladder(network, workload, loads, seeds=(0,), **kw2):
             rows = []

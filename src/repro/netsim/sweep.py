@@ -12,6 +12,10 @@ topology cycle: at load x, every host sources x * link_rate * cycle
 bytes, placed by the workload's spatial pattern.  Emitted rows carry the
 aggregate stats the fig scripts consume (fct99 / fct_mean / throughput /
 bandwidth tax / finished fraction); `summarize` reduces over seeds.
+
+`FlowSweepSpec` / `run_flow_sweep` are the flow-level counterparts: the
+(network x workload x load x seed) FCT grids of Figs. 7/9/10 through
+`flows_jax.simulate_grid`'s auto/dense/tiled engine dispatch.
 """
 from __future__ import annotations
 
@@ -181,6 +185,39 @@ def run_sweep(spec: SweepSpec) -> List[Dict]:
         r, _ = run_design(spec, dp)
         rows.extend(r)
     return rows
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowSweepSpec:
+    """Flow-level analogue of `SweepSpec`: the (network x workload x
+    load x seed) grids Figs. 7/9/10 sweep through the batched flow
+    engine, with `fluid`-style engine dispatch (`flows_jax`'s
+    auto/dense/tiled)."""
+
+    networks: Tuple[str, ...]
+    workloads: Tuple[str, ...] = ("websearch",)
+    loads: Tuple[float, ...] = (0.05, 0.2)
+    seeds: Tuple[int, ...] = (0,)
+    engine: str = "auto"            # flows_jax engine: auto | dense | tiled
+
+    @property
+    def num_scenarios(self) -> int:
+        return (len(self.networks) * len(self.workloads)
+                * len(self.loads) * len(self.seeds))
+
+
+def run_flow_sweep(spec: FlowSweepSpec, **sim_kw) -> List[Dict]:
+    """The whole flow grid through one batched device program (dense: a
+    single vmapped call; tiled: a shared chunk loop whose every
+    dispatch covers the grid).  `sim_kw` goes to
+    `flows.build_scenario` (horizon_s, dt_s, num_hosts, ...); rows are
+    `summarize`-ready."""
+    from repro.netsim.flows_jax import simulate_grid
+
+    return simulate_grid(
+        spec.networks, spec.workloads, spec.loads, seeds=spec.seeds,
+        engine=spec.engine, **sim_kw,
+    )
 
 
 def summarize(

@@ -8,9 +8,9 @@ Stages (select with ``--layers``):
   switch-fault budget).
 * ``ast``        — walk every .py under src/tests/benchmarks/examples/
   scripts for the compat/lockstep/trio/f64 policies.
-* ``jaxpr``      — trace the eleven engine entry points (dense + sparse
-  netsim engines plus their faulted lowerings, five Pallas kernels) and
-  run the f64/callback/recompile rules.
+* ``jaxpr``      — trace the thirteen engine entry points (dense +
+  sparse + tiled-flow netsim engines plus their faulted lowerings, five
+  Pallas kernels) and run the f64/callback/recompile rules.
 
 Exit code 0 iff no ``error``-severity findings.  ``--json`` writes the
 machine-readable report (CI keeps ``results/staticcheck.json``).
@@ -105,6 +105,7 @@ def run_jaxpr(report: Report) -> None:
         count_fault_lowerings,
         count_sparse_lowerings,
         count_sweep_lowerings,
+        count_tiled_lowerings,
         trace_entrypoints,
     )
 
@@ -118,6 +119,8 @@ def run_jaxpr(report: Report) -> None:
     report.extend(fault_recompile, "jaxpr:fault-recompile")
     _, sparse_recompile = count_sparse_lowerings()
     report.extend(sparse_recompile, "jaxpr:sparse-recompile")
+    _, tiled_recompile = count_tiled_lowerings()
+    report.extend(tiled_recompile, "jaxpr:tiled-recompile")
 
 
 def main(argv=None) -> int:

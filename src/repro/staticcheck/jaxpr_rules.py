@@ -27,8 +27,13 @@ Traced entry points: ``fluid_jax._run_batch`` / ``_run_batch_faulted``
 sparse engine's per-step programs — ``count_sparse_lowerings`` holds
 them to one lowering per design point across slices and cycles),
 ``flows_jax._run_batch`` / ``_run_batch_faulted`` (under
-``simulate_grid`` / ``simulate_flows_batch``), and the five Pallas
-kernel ``ops`` wrappers (``rotor_slice_step`` traced with
+``simulate_grid`` / ``simulate_flows_batch``),
+``flows_jax._run_tiled_chunk`` / ``_run_tiled_chunk_faulted`` (the
+streaming tiled flow engine's chunk programs — shapes depend on the
+(batch, window_tiles, tile) geometry only, never on the scenario's
+flow count, and ``count_tiled_lowerings`` holds them to one lowering
+per design point across loads and seeds), and the five Pallas kernel
+``ops`` wrappers (``rotor_slice_step`` traced with
 ``force_pallas=True`` so the kernel body, not the CPU ref fast path,
 is what the rules walk).
 """
@@ -129,6 +134,7 @@ def _entry_specs() -> List[Tuple[str, Callable, Callable]]:
                 sd((2, 5)), sd((2, 5), jnp.int32), sd((2, 5), jnp.bool_),
                 sd((2,)), sd((2,)), sd((2, 5)), sd((2, 5)),
                 sd((2,), jnp.int32), sd((2,), jnp.int32),
+                sd((2, 5), jnp.int32), sd((2, 5)), sd((2,)),
             ),
         ),
         (
@@ -139,9 +145,41 @@ def _entry_specs() -> List[Tuple[str, Callable, Callable]]:
                 sd((2, 5)), sd((2, 5), jnp.int32), sd((2, 5), jnp.bool_),
                 sd((2,)), sd((2,)), sd((2, 5)), sd((2, 5)),
                 sd((2,), jnp.int32), sd((2,), jnp.int32),
+                sd((2, 5), jnp.int32), sd((2, 5)), sd((2,)),
                 sd((2, 5), jnp.int32), sd((2, 5), jnp.int32),
                 sd((2, 5), jnp.int32), sd((2, 5), jnp.int32),
                 sd((2, 7)), sd((2, 7)),
+            ),
+        ),
+        (
+            "netsim.flows_jax._run_tiled_chunk",
+            lambda *a: flows_jax._run_tiled_chunk(*a, num_steps=7,
+                                                  chunk_steps=4),
+            lambda: (
+                sd((2, 3, 4)), sd((2, 3, 4)), sd((2, 3, 4), jnp.int32),
+                sd((2, 3, 4), jnp.bool_), sd((2, 3, 4), jnp.int32),
+                sd((2, 3, 4)),
+                sd((2,)), sd((2,)), sd((2,)),
+                sd((2,), jnp.int32), sd((2,), jnp.int32),
+                sd((2, 288), jnp.int32), sd((2,)), sd((2,)), sd((2,)),
+                sd((), jnp.int32),
+            ),
+        ),
+        (
+            "netsim.flows_jax._run_tiled_chunk_faulted",
+            lambda *a: flows_jax._run_tiled_chunk_faulted(*a, num_steps=7,
+                                                          chunk_steps=4),
+            lambda: (
+                sd((2, 3, 4)), sd((2, 3, 4)), sd((2, 3, 4), jnp.int32),
+                sd((2, 3, 4), jnp.bool_), sd((2, 3, 4), jnp.int32),
+                sd((2, 3, 4)),
+                sd((2,)), sd((2,)), sd((2,)),
+                sd((2,), jnp.int32), sd((2,), jnp.int32),
+                sd((2, 3, 4), jnp.int32), sd((2, 3, 4), jnp.int32),
+                sd((2, 3, 4), jnp.int32), sd((2, 3, 4), jnp.int32),
+                sd((2, 4)), sd((2, 4)),
+                sd((2, 288), jnp.int32), sd((2,)), sd((2,)), sd((2,)),
+                sd((), jnp.int32),
             ),
         ),
         (
@@ -383,5 +421,49 @@ def count_sparse_lowerings(
             "`_sparse_slice_step` lowerings — slice index tensors are "
             "data; the per-step program must lower once per design-point "
             "shape, never per slice or per run",
+            path=path, line=line))
+    return new, findings
+
+
+def count_tiled_lowerings(
+    loads: Sequence[float] = (0.05, 0.2),
+    seeds: Sequence[int] = (0, 1),
+) -> Tuple[int, List[Finding]]:
+    """SC-JAX-RECOMPILE for the tiled flow engine: the streamed chunk
+    program's shapes depend only on the (batch, window_tiles, tile,
+    chunk_steps) geometry — the scenario's total flow count, load and
+    seed are *data*.  Running a small load x seed grid through
+    `simulate_grid(engine="tiled")` twice must add at most one fresh
+    `_run_tiled_chunk` lowering, and the second (warm) run must add
+    zero.
+
+    The window is kept wide enough that capacity growth never triggers
+    a second geometry in this probe (growth lowerings are legitimate
+    but would muddy the once-per-design-point count).
+
+    Returns (new_lowerings, findings)."""
+    from repro.netsim import flows_jax
+
+    kw = dict(
+        num_hosts=16, horizon_s=0.06, dt_s=5e-4, tail_s=0.04,
+        tile_size=64, window_tiles=8, chunk_steps=32,
+    )
+    before = flows_jax._run_tiled_chunk._cache_size()
+    flows_jax.simulate_grid(("opera",), ("websearch",), tuple(loads),
+                            seeds=tuple(seeds), engine="tiled", **kw)
+    cold = flows_jax._run_tiled_chunk._cache_size() - before
+    flows_jax.simulate_grid(("opera",), ("websearch",), tuple(loads),
+                            seeds=tuple(seeds), engine="tiled", **kw)
+    warm = flows_jax._run_tiled_chunk._cache_size() - before - cold
+    new = cold + warm
+    path, line = _src_location(flows_jax._run_tiled_chunk)
+    findings: List[Finding] = []
+    if cold > 1 or warm > 0:
+        findings.append(Finding(
+            "SC-JAX-RECOMPILE",
+            f"{len(loads)}x{len(seeds)} tiled flow grid compiled {cold} "
+            f"cold + {warm} warm `_run_tiled_chunk` lowerings — chunk "
+            "shapes are (batch, window, tile) geometry only; loads and "
+            "seeds are data and must never trigger fresh lowerings",
             path=path, line=line))
     return new, findings

@@ -337,10 +337,12 @@ class TestJaxprRules:
 
     def test_all_entrypoints_trace(self, entries):
         names = {e.name for e in entries}
-        assert len(names) == 11
+        assert len(names) == 13
         assert any("fluid_jax" in n for n in names)
         assert "netsim.fluid_jax._run_batch_faulted" in names
         assert "netsim.flows_jax._run_batch_faulted" in names
+        assert "netsim.flows_jax._run_tiled_chunk" in names
+        assert "netsim.flows_jax._run_tiled_chunk_faulted" in names
         assert "netsim.fluid_jax._sparse_slice_step" in names
         assert "netsim.fluid_jax._sparse_slice_step_faulted" in names
         assert "kernels.rotor_slice.ops.rotor_slice_step" in names
@@ -428,6 +430,22 @@ class TestRecompilePinning:
         assert findings == []
         assert new <= 1
         new2, findings2 = count_sparse_lowerings(num_cycles=3, num_demands=2)
+        assert findings2 == []
+        assert new2 == 0
+
+    def test_tiled_flow_grid_shares_one_lowering(self):
+        """Tiled flow engine: chunk shapes are (batch, window, tile)
+        geometry only — loads and seeds are data.  A load x seed grid
+        must add at most one `_run_tiled_chunk` lowering across a cold
+        run plus a warm re-run, and a further re-run must add none."""
+        from repro.staticcheck.jaxpr_rules import count_tiled_lowerings
+
+        new, findings = count_tiled_lowerings(loads=(0.05, 0.2),
+                                              seeds=(0, 1))
+        assert findings == []
+        assert new <= 1
+        new2, findings2 = count_tiled_lowerings(loads=(0.1, 0.15),
+                                                seeds=(2, 3))
         assert findings2 == []
         assert new2 == 0
 
